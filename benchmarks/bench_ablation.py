@@ -1,0 +1,66 @@
+"""Table 4 reproduction: ablations — GATE, w/o HBKM, w/o fusion embedding,
+w/o contrastive loss, and the NSG baseline; hops at matched recall@10."""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import (
+    GATE_KW,
+    hops_at_recall,
+    load_workload,
+    save_json,
+)
+
+VARIANTS = {
+    "GATE": {},
+    "GATE w/o H": {"use_hbkm": False},
+    "GATE w/o FE": {"use_fusion": False},
+    "GATE w/o L": {"use_contrastive": False},
+}
+
+
+def run(mode: str = "quick", target: float = None, seed: int = 0):
+    from benchmarks.common import achievable_target
+
+    profile, n = ("sift10m-like", 8000)
+    results = {}
+    base_hops = None
+    # NSG baseline (medoid entry) on the same workload
+    w0 = load_workload(profile, n, seed=seed)
+    import numpy as np
+
+    medoid_fn = lambda q: np.full((len(q), 1), w0.nsg.enter_id, np.int32)
+    target = target or achievable_target(
+        w0, {"medoid": medoid_fn}, k=10
+    )
+    print(f"[bench_ablation] matched recall@10 target {target:.3f}")
+    results["target_recall@10"] = target
+    r = hops_at_recall(w0, medoid_fn, target_recall=target, k=10)
+    results["NSG"] = r
+    base_hops = r["mean_hops"] if r else None
+    print(f"[bench_ablation] NSG: {r['mean_hops']:.1f} hops" if r
+          else "[bench_ablation] NSG: target not reached")
+
+    for name, kw in VARIANTS.items():
+        w = load_workload(profile, n, seed=seed, gate_kw=kw)
+        gate_fn = lambda q, w=w: np.asarray(w.index.select_entries(q))
+        r = hops_at_recall(w, gate_fn, target_recall=target, k=10)
+        results[name] = r
+        if r and base_hops:
+            print(f"[bench_ablation] {name}: {r['mean_hops']:.1f} hops "
+                  f"({(1 - r['mean_hops'] / base_hops) * 100:+.1f}% vs NSG)")
+        elif r:
+            print(f"[bench_ablation] {name}: {r['mean_hops']:.1f} hops")
+        else:
+            print(f"[bench_ablation] {name}: target not reached")
+    path = save_json("ablation", results)
+    print(f"[bench_ablation] -> {path}")
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="quick")
+    ap.add_argument("--target", type=float, default=0.9)
+    args = ap.parse_args()
+    run(args.mode, args.target)

@@ -1,0 +1,51 @@
+"""§4.4 reproduction: index/GATE build-time scaling with dataset size.
+Per stage: NSG construction, hub extraction (HBKM), topology features,
+sample generation, two-tower training."""
+from __future__ import annotations
+
+import argparse
+import time
+
+from benchmarks.common import GATE_KW, NSG_KW, save_json
+from repro.core import GateConfig, GateIndex
+from repro.data.synthetic import make_database, train_eval_query_split
+from repro.graphs.nsg import build_nsg
+
+
+def run(mode: str = "quick", seed: int = 0):
+    sizes = (2000, 4000, 8000) if mode == "quick" else (4000, 8000, 16000, 32000)
+    results = {}
+    for n in sizes:
+        db, _ = make_database("sift10m-like", n, seed=seed)
+        t0 = time.time()
+        nsg = build_nsg(db, **NSG_KW)
+        t_nsg = time.time() - t0
+        tq, _ = train_eval_query_split(db, 512, 64, seed=seed + 1)
+        idx = GateIndex.from_graph(
+            db, nsg.neighbors, nsg.enter_id, tq,
+            GateConfig(**GATE_KW, seed=seed),
+        )
+        rep = dict(idx.build_report)
+        rep["t_nsg"] = t_nsg
+        rep["gate_total"] = (
+            rep["t_hubs"] + rep["t_topo"] + rep["t_samples"] + rep["t_train"]
+        )
+        results[n] = rep
+        print(f"[bench_build] n={n}: nsg={t_nsg:.1f}s gate="
+              f"{rep['gate_total']:.1f}s (hubs {rep['t_hubs']:.1f} topo "
+              f"{rep['t_topo']:.1f} samples {rep['t_samples']:.1f} train "
+              f"{rep['t_train']:.1f})")
+    # the paper's claim: "the main bottleneck remains the construction of NSG"
+    last = results[sizes[-1]]
+    print(f"[bench_build] at n={sizes[-1]}: GATE overhead = "
+          f"{last['gate_total'] / last['t_nsg']:.2f}x NSG build time")
+    path = save_json("build", results)
+    print(f"[bench_build] -> {path}")
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="quick")
+    args = ap.parse_args()
+    run(args.mode)

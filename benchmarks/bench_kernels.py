@@ -1,0 +1,132 @@
+"""Kernel benchmarks: interpret-mode correctness sweep + CPU-path timing +
+TPU roofline estimates per kernel (from tile shapes and the v5e model —
+197 TFLOP/s bf16, 819 GB/s HBM)."""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import save_json
+from repro.kernels import ref
+from repro.kernels.gather_dist import gather_dist
+from repro.kernels.l2dist import l2dist
+from repro.kernels.topk import topk_min
+from repro.kernels.twotower_score import twotower_score
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+
+
+def _time(fn, *args, repeats=5):
+    out = fn(*args)
+    jax.tree.map(lambda x: x.block_until_ready(), out)
+    t0 = time.time()
+    for _ in range(repeats):
+        out = fn(*args)
+        jax.tree.map(lambda x: x.block_until_ready(), out)
+    return (time.time() - t0) / repeats
+
+
+def run(mode: str = "quick"):
+    rng = np.random.default_rng(0)
+    results = {}
+
+    # l2dist: Q=1024 C=8192 d=128 (one beam-expansion batch at search scale)
+    Q, C, D = (256, 2048, 128) if mode == "quick" else (1024, 8192, 128)
+    q = jnp.asarray(rng.standard_normal((Q, D)).astype(np.float32))
+    c = jnp.asarray(rng.standard_normal((C, D)).astype(np.float32))
+    t_ref = _time(lambda a, b: ref.l2dist_ref(a, b), q, c)
+    ok = np.allclose(
+        l2dist(q[:64], c[:256], interpret=True),
+        ref.l2dist_ref(q[:64], c[:256]), rtol=2e-5, atol=2e-4,
+    )
+    flops = 2.0 * Q * C * D
+    bytes_ = 4.0 * (Q * D + C * D + Q * C)
+    results["l2dist"] = {
+        "interpret_ok": bool(ok),
+        "cpu_ref_s": t_ref,
+        "flops": flops,
+        "bytes": bytes_,
+        "tpu_compute_s": flops / PEAK_FLOPS,
+        "tpu_memory_s": bytes_ / HBM_BW,
+        "tpu_bound": "memory" if bytes_ / HBM_BW > flops / PEAK_FLOPS
+        else "compute",
+    }
+
+    # topk over the merged candidate rows
+    B, Cc, K = (256, 1024, 32)
+    d = jnp.asarray(rng.standard_normal((B, Cc)).astype(np.float32))
+    t_ref = _time(lambda x: ref.topk_min_ref(x, K), d)
+    v_i, i_i = topk_min(d[:32], K, interpret=True)
+    v_r, i_r = ref.topk_min_ref(d[:32], K)
+    results["topk"] = {
+        "interpret_ok": bool(
+            np.allclose(v_i, v_r) and np.array_equal(i_i, i_r)
+        ),
+        "cpu_ref_s": t_ref,
+        "bytes": 4.0 * B * Cc,
+        "tpu_memory_s": 4.0 * B * Cc / HBM_BW,
+        "tpu_bound": "memory",
+    }
+
+    # gather_dist at beam-search shapes
+    Bb, R, Dd = 128, 32, 128
+    vecs = jnp.asarray(rng.standard_normal((Bb, R, Dd)).astype(np.float32))
+    qq = jnp.asarray(rng.standard_normal((Bb, Dd)).astype(np.float32))
+    ids = jnp.asarray(rng.integers(-1, 999, (Bb, R)).astype(np.int32))
+    t_ref = _time(ref.gather_dist_ref, vecs, qq, ids)
+    ok = np.allclose(
+        gather_dist(vecs[:16], qq[:16], ids[:16], interpret=True),
+        ref.gather_dist_ref(vecs[:16], qq[:16], ids[:16]),
+        rtol=2e-5, atol=2e-4,
+    )
+    flops = 3.0 * Bb * R * Dd
+    bytes_ = 4.0 * (Bb * R * Dd + Bb * Dd + Bb * R)
+    results["gather_dist"] = {
+        "interpret_ok": bool(ok),
+        "cpu_ref_s": t_ref,
+        "flops": flops, "bytes": bytes_,
+        "tpu_compute_s": flops / PEAK_FLOPS,
+        "tpu_memory_s": bytes_ / HBM_BW,
+        "tpu_bound": "memory",
+    }
+
+    # twotower_score at entry-selection shapes (B queries x 512 hubs)
+    Bq, H, Do = 4096, 512, 128
+    zq = jnp.asarray(rng.standard_normal((Bq, Do)).astype(np.float32))
+    zh = jnp.asarray(rng.standard_normal((H, Do)).astype(np.float32))
+    t_ref = _time(ref.twotower_score_ref, zq, zh)
+    ok = np.allclose(
+        twotower_score(zq[:64], zh[:64], interpret=True),
+        ref.twotower_score_ref(zq[:64], zh[:64]), rtol=2e-5, atol=2e-5,
+    )
+    flops = 2.0 * Bq * H * Do
+    bytes_ = 4.0 * (Bq * Do + H * Do + Bq * H)
+    results["twotower_score"] = {
+        "interpret_ok": bool(ok),
+        "cpu_ref_s": t_ref,
+        "flops": flops, "bytes": bytes_,
+        "tpu_compute_s": flops / PEAK_FLOPS,
+        "tpu_memory_s": bytes_ / HBM_BW,
+        "tpu_bound": "memory" if bytes_ / HBM_BW > flops / PEAK_FLOPS
+        else "compute",
+    }
+
+    for k, v in results.items():
+        print(f"[bench_kernels] {k}: interpret_ok={v['interpret_ok']} "
+              f"cpu_ref={v['cpu_ref_s'] * 1e3:.2f}ms "
+              f"tpu_bound={v.get('tpu_bound')}")
+    path = save_json("kernels", results)
+    print(f"[bench_kernels] -> {path}")
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="quick")
+    args = ap.parse_args()
+    run(args.mode)

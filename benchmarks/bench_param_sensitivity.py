@@ -1,0 +1,48 @@
+"""Fig. 7 reproduction: sensitivity to subgraph hop h and sample threshold
+t_pos (recall at fixed beam, plus build-time cost of raising h)."""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import (
+    load_workload,
+    measure_entry_strategy,
+    save_json,
+)
+
+
+def run(mode: str = "quick", seed: int = 0):
+    profile, n = ("sift10m-like", 8000)
+    results = {"h": {}, "t_pos": {}}
+
+    for h in (3, 5, 7, 9):
+        t0 = time.time()
+        w = load_workload(profile, n, seed=seed, gate_kw={"h": h})
+        build_s = time.time() - t0
+        gate_fn = lambda q, w=w: np.asarray(w.index.select_entries(q))
+        rows = measure_entry_strategy(w, gate_fn, beam_widths=(16, 32, 64))
+        results["h"][h] = {"rows": rows, "build_s": build_s}
+        print(f"[bench_param] h={h}: recall@10(bw=32)="
+              f"{rows[1]['recall@10']:.3f} build={build_s:.1f}s")
+
+    for t_pos in (1, 3, 5, 7):
+        w = load_workload(profile, n, seed=seed, gate_kw={"t_pos": t_pos})
+        gate_fn = lambda q, w=w: np.asarray(w.index.select_entries(q))
+        rows = measure_entry_strategy(w, gate_fn, beam_widths=(16, 32, 64))
+        results["t_pos"][t_pos] = {"rows": rows}
+        print(f"[bench_param] t_pos={t_pos}: recall@10(bw=32)="
+              f"{rows[1]['recall@10']:.3f}")
+
+    path = save_json("param_sensitivity", results)
+    print(f"[bench_param] -> {path}")
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="quick")
+    args = ap.parse_args()
+    run(args.mode)

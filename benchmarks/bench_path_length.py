@@ -1,0 +1,57 @@
+"""Table 3 reproduction: search path length (hops) at 95% recall@1 —
+GATE vs NSG(medoid) vs HVS-like entry selection."""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import (
+    entry_strategies,
+    hops_at_recall,
+    load_workload,
+    save_json,
+)
+
+PROFILES = {
+    "quick": [("sift10m-like", 8000)],
+    "full": [("gist1m-like", 6000), ("tiny5m-like", 8000),
+             ("text2image10m-like", 12000)],
+}
+
+
+def run(mode: str = "quick", target: float = None, seed: int = 0):
+    from benchmarks.common import achievable_target
+
+    results = {}
+    for profile, n in PROFILES[mode]:
+        w = load_workload(profile, n, seed=seed)
+        strat = entry_strategies(w)
+        names = ("GATE", "NSG(medoid)", "HVS-like(kmtree)")
+        t = target or achievable_target(
+            w, {k: strat[k] for k in names}, k=1
+        )
+        print(f"[bench_path_length] {profile}: matched recall@1 target {t:.3f}")
+        rows = {"target_recall@1": t}
+        for name in names:
+            r = hops_at_recall(w, strat[name], target_recall=t, k=1)
+            rows[name] = r
+            hops = r["mean_hops"] if r else float("nan")
+            print(f"[bench_path_length] {profile} {name}: "
+                  f"{hops:.1f} hops @ recall@1>={t:.3f}"
+                  if r else
+                  f"[bench_path_length] {profile} {name}: target not reached")
+        if rows.get("GATE") and rows.get("NSG(medoid)"):
+            red = 1 - rows["GATE"]["mean_hops"] / rows["NSG(medoid)"]["mean_hops"]
+            print(f"[bench_path_length] {profile}: GATE path reduction "
+                  f"{red * 100:.1f}% (paper: 30-40%)")
+        results[profile] = rows
+    path = save_json("path_length", results)
+    print(f"[bench_path_length] -> {path}")
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="quick", choices=["quick", "full"])
+    ap.add_argument("--target", type=float, default=0.95)
+    args = ap.parse_args()
+    run(args.mode, args.target)

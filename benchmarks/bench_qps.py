@@ -1,0 +1,68 @@
+"""Fig. 5 reproduction: QPS vs recall@10 across dataset profiles, GATE vs the
+four competitor entry strategies on the same NSG."""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import (
+    entry_strategies,
+    load_workload,
+    measure_entry_strategy,
+    save_json,
+)
+
+PROFILES = {
+    "quick": [("sift10m-like", 8000)],
+    "full": [
+        ("gist1m-like", 6000),
+        ("laion3m-like", 8000),
+        ("tiny5m-like", 8000),
+        ("sift10m-like", 12000),
+        ("text2image10m-like", 12000),
+    ],
+}
+
+
+def run(mode: str = "quick", seed: int = 0):
+    results = {}
+    for profile, n in PROFILES[mode]:
+        w = load_workload(profile, n, seed=seed)
+        per = {}
+        for name, fn in entry_strategies(w).items():
+            per[name] = measure_entry_strategy(w, fn)
+        results[profile] = per
+        # headline: speed-up at the highest matched recall@10
+        best = _speedup_at_matched_recall(per)
+        print(f"[bench_qps] {profile}: {best}")
+    path = save_json("qps", results)
+    print(f"[bench_qps] -> {path}")
+    return results
+
+
+def _speedup_at_matched_recall(per: dict) -> str:
+    """QPS ratio GATE / best-competitor at the recall level both reach."""
+    gate = per["GATE"]
+    others = {k: v for k, v in per.items() if k != "GATE"}
+    best_line = ""
+    for row in reversed(gate):  # highest beam first = highest recall
+        r = row["recall@10"]
+        comp = []
+        for name, rows in others.items():
+            ok = [x for x in rows if x["recall@10"] >= r - 0.005]
+            if ok:
+                comp.append((max(x["qps"] for x in ok), name))
+        if comp:
+            best_qps, best_name = max(comp)
+            return (
+                f"recall@10={r:.3f}: GATE {row['qps']:.0f} qps vs "
+                f"{best_name} {best_qps:.0f} qps "
+                f"({row['qps'] / best_qps:.2f}x)"
+            )
+    return "no matched recall level"
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="quick", choices=["quick", "full"])
+    args = ap.parse_args()
+    run(args.mode)

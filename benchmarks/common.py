@@ -1,0 +1,192 @@
+"""Shared benchmark harness: dataset → NSG → GATE → measured search sweeps.
+
+Every benchmark reports JSON into experiments/bench/ — benchmarks/run.py
+aggregates.  Scales are CPU-sized surrogates of the paper's datasets (same
+dims, clusterability per §3); the paper's *relative* claims (speed-up vs
+baselines at matched recall) are what we measure.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import GateConfig, GateIndex
+from repro.core.baselines import (
+    build_hash_probe,
+    build_kmeans_tree,
+    hash_entries,
+    kmtree_entries,
+)
+from repro.data.synthetic import (
+    make_database,
+    make_queries_ood,
+    train_eval_query_split,
+)
+from repro.graphs.knn import exact_knn, recall_at_k
+from repro.graphs.nsg import build_nsg
+from repro.graphs.search import batched_search
+
+OUT_DIR = os.environ.get("BENCH_OUT", "experiments/bench")
+
+NSG_KW = dict(R=32, knn_k=32, search_l=64, pool_size=96)
+GATE_KW = dict(n_hubs=64, epochs=300, batch_hubs=64, subgraph_max_nodes=96)
+
+
+@dataclass
+class Workload:
+    name: str
+    db: np.ndarray
+    train_q: np.ndarray
+    eval_q: np.ndarray
+    true_ids: np.ndarray  # (Q, 100) ground truth of eval_q
+    nsg: object
+    index: GateIndex
+
+
+_CACHE: Dict[str, Workload] = {}
+
+
+def load_workload(
+    profile: str = "sift10m-like",
+    n: int = 8000,
+    n_train_q: int = 768,
+    n_eval_q: int = 256,
+    seed: int = 0,
+    gate_kw: Optional[dict] = None,
+    ood_fraction: float = 0.0,
+) -> Workload:
+    key = f"{profile}:{n}:{seed}:{ood_fraction}:{sorted((gate_kw or {}).items())}"
+    if key in _CACHE:
+        return _CACHE[key]
+    db, _ = make_database(profile, n, seed=seed)
+    nsg = build_nsg(db, **NSG_KW)
+    tq, eq = train_eval_query_split(
+        db, n_train_q, n_eval_q, seed=seed + 1, ood_fraction=ood_fraction
+    )
+    gcfg = GateConfig(**{**GATE_KW, **(gate_kw or {}), "seed": seed})
+    index = GateIndex.from_graph(db, nsg.neighbors, nsg.enter_id, tq, gcfg)
+    true_ids, _ = exact_knn(eq, db, 100)
+    w = Workload(profile, db, tq, eq, true_ids, nsg, index)
+    _CACHE[key] = w
+    return w
+
+
+def measure_entry_strategy(
+    w: Workload,
+    entries_fn,               # queries -> (B, E) entry ids
+    *,
+    beam_widths=(8, 16, 32, 64, 128),
+    k: int = 10,
+    repeats: int = 3,
+) -> List[dict]:
+    """Sweep beam width; report recall@k/recall@1, QPS, hops per point."""
+    dev = {
+        "db": jnp.asarray(w.db),
+        "nbrs": jnp.asarray(w.nsg.neighbors),
+        "q": jnp.asarray(w.eval_q),
+    }
+    out = []
+    entries = jnp.asarray(entries_fn(w.eval_q))
+    for bw in beam_widths:
+        fn = lambda: batched_search(
+            dev["db"], dev["nbrs"], dev["q"], entries,
+            beam_width=bw, max_hops=max(4 * bw, 64), k=max(k, 10),
+        )
+        res = fn()
+        jax.block_until_ready(res.ids)
+        t0 = time.time()
+        for _ in range(repeats):
+            res = fn()
+            jax.block_until_ready(res.ids)
+        dt = (time.time() - t0) / repeats
+        ids = np.asarray(res.ids)
+        out.append(
+            {
+                "beam_width": bw,
+                "recall@1": recall_at_k(ids, w.true_ids, 1),
+                f"recall@{k}": recall_at_k(ids, w.true_ids, k),
+                "qps": len(w.eval_q) / dt,
+                "mean_hops": float(np.asarray(res.hops).mean()),
+                "mean_dist_evals": float(np.asarray(res.dist_evals).mean()),
+            }
+        )
+    return out
+
+
+def entry_strategies(w: Workload) -> Dict[str, object]:
+    """All competitor entry-selection strategies over the same base graph."""
+    tree = build_kmeans_tree(w.db, branch=8, depth=2)
+    probe = build_hash_probe(w.db, w.index.hubs.ids, n_bits=16)
+    B = None
+
+    def gate(q):
+        return np.asarray(w.index.select_entries(q))
+
+    def medoid(q):
+        return np.full((len(q), 1), w.nsg.enter_id, np.int32)
+
+    def random_entry(q):
+        rng = np.random.default_rng(0)
+        return rng.integers(0, len(w.db), (len(q), 1)).astype(np.int32)
+
+    def kmtree(q):
+        return kmtree_entries(tree, q)
+
+    def hashp(q):
+        return hash_entries(probe, q)
+
+    return {
+        "GATE": gate,
+        "NSG(medoid)": medoid,
+        "HNSW-like(random)": random_entry,
+        "HVS-like(kmtree)": kmtree,
+        "LSH-APG-like(hash)": hashp,
+    }
+
+
+def hops_at_recall(
+    w: Workload, entries_fn, target_recall: float = 0.95, k: int = 1,
+    beam_widths=(8, 16, 24, 32, 48, 64, 96, 128, 192, 256),
+) -> Optional[dict]:
+    """Smallest-beam sweep point reaching the recall target → its mean hops
+    (the paper's Table 3/4 metric: path length at matched recall)."""
+    for bw in beam_widths:
+        rows = measure_entry_strategy(
+            w, entries_fn, beam_widths=(bw,), k=max(k, 10), repeats=1
+        )
+        r = rows[0]
+        if r[f"recall@{1 if k == 1 else k}"] >= target_recall:
+            return r
+    return None
+
+
+def achievable_target(
+    w: Workload, strategies: dict, k: int = 1, beam: int = 256,
+    margin: float = 0.98,
+) -> float:
+    """Highest recall EVERY strategy reaches at the max beam — the matched
+    level for path-length comparisons (the paper's fixed 95% is not always
+    attainable on the hardest synthetic surrogates)."""
+    lo = 1.0
+    key = f"recall@{1 if k == 1 else k}"
+    for fn in strategies.values():
+        rows = measure_entry_strategy(
+            w, fn, beam_widths=(beam,), k=max(k, 10), repeats=1
+        )
+        lo = min(lo, rows[0][key])
+    return lo * margin
+
+
+def save_json(name: str, payload):
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path

@@ -1,0 +1,66 @@
+"""Benchmark runner: ``python -m benchmarks.run [--mode full]``.
+
+One benchmark per paper artifact:
+    bench_qps                 Fig. 5  QPS vs recall, GATE vs 4 competitors
+    bench_path_length         Tab. 3  hops at 95% recall@1
+    bench_ablation            Tab. 4  w/o HBKM / fusion / contrastive
+    bench_ood                 Fig. 6  in- vs out-of-distribution queries
+    bench_param_sensitivity   Fig. 7  h and t_pos sweeps
+    bench_build               §4.4    build-time scaling per stage
+    bench_kernels             —       Pallas kernel validation + roofline
+JSON artifacts land in experiments/bench/.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="quick", choices=["quick", "full"])
+    ap.add_argument("--only", default=None,
+                    help="comma list, e.g. qps,ablation")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        bench_ablation,
+        bench_build,
+        bench_kernels,
+        bench_ood,
+        bench_param_sensitivity,
+        bench_path_length,
+        bench_qps,
+    )
+
+    suite = {
+        "kernels": bench_kernels.run,
+        "qps": bench_qps.run,
+        "path_length": bench_path_length.run,
+        "ablation": bench_ablation.run,
+        "ood": bench_ood.run,
+        "param_sensitivity": bench_param_sensitivity.run,
+        "build": bench_build.run,
+    }
+    only = set(args.only.split(",")) if args.only else None
+    failures = []
+    for name, fn in suite.items():
+        if only and name not in only:
+            continue
+        print(f"\n===== {name} ({args.mode}) =====", flush=True)
+        t0 = time.time()
+        try:
+            fn(args.mode)
+            print(f"===== {name} done in {time.time() - t0:.1f}s =====")
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        print(f"\nFAILED benchmarks: {failures}")
+        raise SystemExit(1)
+    print("\nall benchmarks complete; artifacts in experiments/bench/")
+
+
+if __name__ == "__main__":
+    main()

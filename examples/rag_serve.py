@@ -1,0 +1,70 @@
+"""End-to-end serving driver: GATE-accelerated retrieval feeding batched LM
+generation (the paper's production seat — RAG).
+
+    PYTHONPATH=src python examples/rag_serve.py [--arch gemma-2b] [--batch 8]
+
+Pipeline per request batch:
+    request embedding → two-tower query tower → nav-graph entry → Algorithm-1
+    beam search on NSG → top-k docs → [docs ‖ prompt] → prefill → decode loop.
+Runtime: ~3 min on CPU (reduced same-family model).
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.core import GateConfig, GateIndex
+from repro.data.synthetic import make_database, make_queries_in_dist
+from repro.graphs.nsg import build_nsg
+from repro.models.model import build_model
+from repro.serve.engine import ServeEngine
+from repro.serve.retrieval import RagPipeline
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma-2b")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--db-size", type=int, default=4000)
+    ap.add_argument("--k", type=int, default=4)
+    ap.add_argument("--new-tokens", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch)
+    print(f"1) LM: {args.arch} (reduced same-family config)")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(cfg, params)
+
+    print(f"2) vector DB ({args.db_size} x 128) + NSG + GATE index ...")
+    db, _ = make_database("sift10m-like", args.db_size, seed=0)
+    hist_q = make_queries_in_dist(db, 512, seed=1)
+    nsg = build_nsg(db, R=32, knn_k=32, search_l=64, pool_size=96)
+    index = GateIndex.from_graph(
+        db, nsg.neighbors, nsg.enter_id, hist_q,
+        GateConfig(n_hubs=32, epochs=150, batch_hubs=32),
+    )
+
+    rng = np.random.default_rng(0)
+    doc_tokens = rng.integers(2, cfg.vocab_size, (args.db_size, 8)).astype(
+        np.int32
+    )
+    pipe = RagPipeline(index, engine, doc_tokens, k=args.k, beam_width=32)
+
+    print(f"3) serving {args.batch} batched requests ...")
+    queries = make_queries_in_dist(db, args.batch, seed=2)
+    prompts = rng.integers(2, cfg.vocab_size, (args.batch, 16)).astype(np.int32)
+    t0 = time.time()
+    res = pipe(queries, prompts, max_new_tokens=args.new_tokens)
+    dt = time.time() - t0
+    print(f"   retrieved ids[0] = {res.retrieved_ids[0]}")
+    print(f"   generated[0]     = {res.generation.tokens[0]}")
+    print(f"   {args.batch} requests x {res.generation.steps} new tokens "
+          f"in {dt:.2f}s "
+          f"({args.batch * res.generation.steps / dt:.1f} tok/s)")
+
+
+if __name__ == "__main__":
+    main()

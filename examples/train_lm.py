@@ -1,0 +1,69 @@
+"""LM training example: any assigned arch (reduced config) with the full
+substrate — deterministic data pipeline, AdamW, microbatched gradient
+accumulation, fault-tolerant runner with async checkpoints.
+
+    PYTHONPATH=src python examples/train_lm.py --arch llama3-8b --steps 200
+
+Injects a crash at step 120 to demonstrate checkpoint/restart producing the
+identical final state.  Runtime: ~3 min on CPU.
+"""
+import argparse
+import shutil
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.distributed.fault import FaultTolerantRunner, RunnerConfig
+from repro.models.model import build_model
+from repro.train.loop import make_train_state, make_train_step
+from repro.train.optim import adamw
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--micro", type=int, default=2)
+    ap.add_argument("--crash-at", type=int, default=120)
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch)
+    model = build_model(cfg)
+    optim = adamw(lr=1e-3, warmup=20, total_steps=args.steps)
+    step_fn = jax.jit(
+        make_train_step(model, optim, num_microbatches=args.micro),
+        donate_argnums=(0,),
+    )
+    pipe = TokenPipeline(DataConfig(cfg.vocab_size, args.seq, args.batch))
+    ckpt_dir = tempfile.mkdtemp(prefix="train_lm_")
+
+    losses = []
+
+    def on_metrics(step, m):
+        losses.append(float(m["loss"]))
+        if step % 20 == 0:
+            print(f"  step {step:4d}  loss {losses[-1]:.4f}", flush=True)
+
+    runner = FaultTolerantRunner(
+        RunnerConfig(ckpt_dir, ckpt_every=50, max_restarts=3),
+        step_fn, pipe.batch,
+        lambda: make_train_state(model, optim, jax.random.PRNGKey(0)),
+    )
+    print(f"training {args.arch} (reduced) for {args.steps} steps; "
+          f"injected crash at step {args.crash_at}")
+    state, step = runner.run(
+        args.steps, fail_at={args.crash_at: 1}, on_metrics=on_metrics
+    )
+    print(f"done at step {step}; restarts survived: {runner.restarts}")
+    print(f"loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+    print(f"straggler report: {runner.straggler_report()}")
+    shutil.rmtree(ckpt_dir, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

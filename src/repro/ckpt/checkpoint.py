@@ -1,0 +1,209 @@
+"""Sharding-aware checkpoint/restore with async save and elastic re-shard.
+
+Layout: one directory per step —
+    <dir>/step_000120/
+        manifest.json     tree structure, shapes, dtypes, data-iterator state
+        arrays.npz        flat param/opt tensors (zipped npz)
+    <dir>/LATEST          atomic pointer (tmp+rename)
+
+Design points for the 1000-node deployment this models:
+  * save path is host-offload + background thread — the train loop donates
+    nothing and continues while serialization runs (async checkpointing);
+  * restore takes a TARGET SHARDING tree: arrays are placed shard-by-shard
+    with ``jax.device_put``, so a checkpoint written on one mesh restores
+    onto any other (elastic re-scale) — the GSPMD weight layout is not baked
+    into the file;
+  * every step directory is self-contained and the LATEST pointer flips
+    atomically, so a crash mid-save never corrupts the restore point
+    (fault tolerance: restart always finds a complete checkpoint);
+  * keep_last prunes old steps AFTER the new pointer lands.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import threading
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+SEP = "/"
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}{k}{SEP}"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}{SEP}"))
+    else:
+        out[prefix[: -len(SEP)]] = tree
+    return out
+
+
+def _unflatten(flat: Dict[str, Any], structure):
+    if isinstance(structure, dict):
+        return {
+            k: _unflatten(
+                {
+                    kk[len(k) + 1 :]: v
+                    for kk, v in flat.items()
+                    if kk == k or kk.startswith(k + SEP)
+                },
+                structure[k],
+            )
+            for k in structure
+        }
+    if isinstance(structure, (list, tuple)):
+        t = type(structure)
+        return t(
+            _unflatten(
+                {
+                    kk[len(str(i)) + 1 :]: v
+                    for kk, v in flat.items()
+                    if kk == str(i) or kk.startswith(str(i) + SEP)
+                },
+                s,
+            )
+            for i, s in enumerate(structure)
+        )
+    return flat[""] if "" in flat else next(iter(flat.values()))
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep_last: int = 3):
+        self.dir = directory
+        self.keep_last = keep_last
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # ------------------------------------------------------------------ save
+    def save(
+        self,
+        step: int,
+        state,
+        extra: Optional[Dict[str, Any]] = None,
+        *,
+        blocking: bool = False,
+    ):
+        """Snapshot to host, then serialize in a background thread."""
+        self.wait()  # one in-flight save at a time
+        flat = _flatten(state)
+        host = {k: np.asarray(v) for k, v in flat.items()}  # device→host copy
+        manifest = {
+            "step": step,
+            "keys": {
+                k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                for k, v in host.items()
+            },
+            "extra": extra or {},
+            "time": time.time(),
+        }
+
+        def work():
+            try:
+                self._write(step, host, manifest)
+            except BaseException as e:  # noqa: BLE001 — surfaced via wait()
+                self._error = e
+
+        if blocking:
+            work()
+            self._raise_if_failed()
+        else:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+
+    def _write(self, step: int, host, manifest):
+        name = f"step_{step:09d}"
+        final = os.path.join(self.dir, name)
+        tmp = tempfile.mkdtemp(prefix=f".{name}.", dir=self.dir)
+        try:
+            np.savez(os.path.join(tmp, "arrays.npz"), **host)
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+        except BaseException:
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise
+        # atomic LATEST flip
+        ptr_tmp = os.path.join(self.dir, ".LATEST.tmp")
+        with open(ptr_tmp, "w") as f:
+            f.write(name)
+        os.replace(ptr_tmp, os.path.join(self.dir, "LATEST"))
+        self._prune()
+
+    def _prune(self):
+        steps = sorted(
+            d for d in os.listdir(self.dir) if d.startswith("step_")
+        )
+        for d in steps[: -self.keep_last]:
+            shutil.rmtree(os.path.join(self.dir, d), ignore_errors=True)
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        self._raise_if_failed()
+
+    def _raise_if_failed(self):
+        if self._error is not None:
+            e, self._error = self._error, None
+            raise RuntimeError("async checkpoint save failed") from e
+
+    # --------------------------------------------------------------- restore
+    def latest_step(self) -> Optional[int]:
+        ptr = os.path.join(self.dir, "LATEST")
+        if not os.path.exists(ptr):
+            return None
+        with open(ptr) as f:
+            return int(f.read().strip().split("_")[1])
+
+    def restore(
+        self,
+        step: Optional[int] = None,
+        *,
+        target_shardings=None,
+        structure=None,
+    ) -> Tuple[Any, Dict[str, Any]]:
+        """Returns (state, extra). ``target_shardings`` (same tree as state)
+        re-shards each array for the CURRENT mesh — elastic restore."""
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        path = os.path.join(self.dir, f"step_{step:09d}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        with np.load(os.path.join(path, "arrays.npz")) as z:
+            host = {k: z[k] for k in z.files}
+        shard_flat = _flatten(target_shardings) if target_shardings else {}
+        placed = {}
+        for k, v in host.items():
+            s = shard_flat.get(k)
+            placed[k] = jax.device_put(v, s) if s is not None else v
+        if structure is None:
+            # rebuild nested dict purely from key paths
+            state = _nest_from_paths(placed)
+        else:
+            state = _unflatten(placed, structure)
+        return state, manifest.get("extra", {})
+
+
+def _nest_from_paths(flat: Dict[str, Any]):
+    root: Dict[str, Any] = {}
+    for k, v in flat.items():
+        parts = k.split(SEP)
+        cur = root
+        for p in parts[:-1]:
+            cur = cur.setdefault(p, {})
+        cur[parts[-1]] = v
+    return root

@@ -1,0 +1,162 @@
+"""Config dataclasses for architectures, shapes, and execution profiles.
+
+Every assigned architecture gets a module in ``repro.configs`` exposing
+``CONFIG`` (the exact published dims) and ``reduced()`` (a small same-family
+config for CPU smoke tests).  Shape specs (the assigned input-shape set) live
+here as well.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, replace
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class MoESpec:
+    """Mixture-of-experts block spec (GShard/Mixtral style)."""
+
+    num_experts: int
+    experts_per_token: int
+    shared_experts: int = 0
+    # Per-expert FFN hidden size; ``None`` means "use model d_ff".
+    expert_d_ff: Optional[int] = None
+    shared_d_ff: Optional[int] = None
+    router_aux_coef: float = 0.01
+    # "dense": compute every expert for every token, combine by router weight
+    #          (no token dropping; the paper-faithful, waste-visible baseline).
+    # "dropping": capacity-based sort/gather dispatch (GShard), active FLOPs only.
+    impl: str = "dense"
+    capacity_factor: float = 1.25
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | hybrid | ssm | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+
+    mlp_act: str = "swiglu"  # swiglu | geglu
+    qkv_bias: bool = False
+    window: Optional[int] = None  # sliding-window attention (rolling KV buffer)
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+
+    moe: Optional[MoESpec] = None
+
+    # SSM / hybrid / RWKV
+    ssm_state: int = 0
+    mamba_headdim: int = 64
+    mamba_expand: int = 2
+    conv_kernel: int = 4
+    attn_every: int = 0  # zamba2: shared attention block applied every N layers
+
+    # Modality stubs (backbone-only archs)
+    encoder_layers: int = 0  # enc-dec: number of encoder layers
+    num_patches: int = 0  # vlm: image-token prefix length (precomputed embeds)
+    patch_dim: int = 0  # vlm: incoming patch embedding dim (InternViT side)
+
+    # Execution policy
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    scan_layers: bool = True
+    remat: bool = True
+    attn_chunk: int = 1024  # blockwise-attention KV chunk
+    ssm_chunk: int = 256
+    rwkv_chunk: int = 128
+    # Unused-lane waste detector: set by sharding layer when a logical rule had
+    # to fall back to replication (dim not divisible by mesh axis).
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True if the arch supports ~O(1)-state or windowed decode at 500k."""
+        if self.family in ("ssm", "hybrid"):
+            return True
+        return self.window is not None
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.num_heads // max(self.num_kv_heads, 1)
+
+    def with_(self, **kw) -> "ModelConfig":
+        return replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    """One assigned input-shape cell."""
+
+    name: str
+    kind: str  # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+LM_SHAPES: Tuple[ShapeSpec, ...] = (
+    ShapeSpec("train_4k", "train", 4096, 256),
+    ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    ShapeSpec("decode_32k", "decode", 32768, 128),
+    ShapeSpec("long_500k", "decode", 524288, 1),
+)
+
+SHAPES = {s.name: s for s in LM_SHAPES}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeSpec) -> Tuple[bool, str]:
+    """Whether an (arch, shape) cell is runnable; reason if not.
+
+    Per assignment: ``long_500k`` needs sub-quadratic attention — skipped for
+    pure full-attention archs (noted in DESIGN.md); run for SSM/hybrid/SWA.
+    """
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, (
+            "long_500k skipped: %s is pure full-attention (KV cache at 524288 "
+            "positions is unbounded; no sub-quadratic path)" % cfg.name
+        )
+    return True, ""
+
+
+def reduced_common(cfg: ModelConfig, **extra) -> ModelConfig:
+    """Generic reduction used by smoke tests: tiny dims, same family/topology."""
+    kw = dict(
+        num_layers=min(cfg.num_layers, 2),
+        d_model=128,
+        num_heads=4,
+        num_kv_heads=min(cfg.num_kv_heads, 4) if cfg.num_kv_heads > 1 else 1,
+        head_dim=32,
+        d_ff=256,
+        vocab_size=512,
+        encoder_layers=2 if cfg.encoder_layers else 0,
+        num_patches=8 if cfg.num_patches else 0,
+        patch_dim=64 if cfg.patch_dim else 0,
+        attn_chunk=64,
+        ssm_chunk=32,
+        rwkv_chunk=16,
+        scan_layers=cfg.scan_layers,
+        param_dtype="float32",
+        compute_dtype="float32",
+    )
+    if cfg.moe is not None:
+        kw["moe"] = replace(
+            cfg.moe,
+            num_experts=min(cfg.moe.num_experts, 4),
+            experts_per_token=min(cfg.moe.experts_per_token, 2),
+            shared_experts=min(cfg.moe.shared_experts, 1),
+            expert_d_ff=128 if cfg.moe.expert_d_ff else None,
+            shared_d_ff=128 if cfg.moe.shared_d_ff else None,
+        )
+    if cfg.ssm_state:
+        kw["ssm_state"] = min(cfg.ssm_state, 16)
+    if cfg.attn_every:
+        kw["attn_every"] = 2
+    if cfg.window:
+        kw["window"] = 64
+    kw.update(extra)
+    return replace(cfg, **kw)

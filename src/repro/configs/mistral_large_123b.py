@@ -1,0 +1,19 @@
+"""mistral-large-123b [dense] — GQA. [hf:mistralai/Mistral-Large-Instruct-2407]"""
+from repro.configs.base import ModelConfig, reduced_common
+
+CONFIG = ModelConfig(
+    name="mistral-large-123b",
+    family="dense",
+    num_layers=88,
+    d_model=12288,
+    num_heads=96,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=28672,
+    vocab_size=32768,
+    rope_theta=1_000_000.0,
+)
+
+
+def reduced() -> ModelConfig:
+    return reduced_common(CONFIG)

@@ -1,0 +1,284 @@
+"""GateIndex — the paper's full pipeline behind one build/search API.
+
+Build (offline):
+  1. underlying proximity graph (NSG by default; any padded adjacency works)
+  2. hub extraction via HBKM (§4.1)
+  3. guided-walk subgraph sampling + WL topology tokens (§4.2)
+  4. positive/negative query queues from historical queries (Def. 4)
+  5. contrastive two-tower training (§4.3, Eq. 3+4)
+  6. navigation graph over learned hub representations
+
+Search (online, fully jit-able):
+  query tower MLP → greedy cosine descent on the nav graph → entry hub →
+  Algorithm-1 beam search on the base graph.
+
+GATE is a *plug-in*: ``GateIndex.from_graph`` accepts any (neighbors, enter)
+pair, leaving the underlying index untouched (paper §1).
+"""
+from __future__ import annotations
+
+import pickle
+import time
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import navgraph as ng
+from repro.core.hubs import HubSet, extract_hubs, kmeans_hubs
+from repro.core.samples import SampleSet, hop_counts, make_samples, top1_targets
+from repro.core.subgraph import sample_all_subgraphs
+from repro.core.topo_embed import embed_all
+from repro.core.twotower import (
+    TwoTowerConfig,
+    hub_tower,
+    query_tower,
+    train_two_tower,
+)
+from repro.graphs.nsg import NSG, build_nsg
+from repro.graphs.search import SearchResult, batched_search
+
+
+@dataclass(frozen=True)
+class GateConfig:
+    n_hubs: int = 64            # |V| (paper: 512 at 10M scale)
+    h: int = 5                  # subgraph max hop
+    t_pos: int = 3
+    t_neg: int = 15
+    s_edges: int = 8            # nav-graph out-degree
+    d_u: int = 64
+    wl_iters: int = 3
+    subgraph_max_nodes: int = 256
+    epochs: int = 300
+    batch_hubs: int = 64
+    lr: float = 1e-3
+    probe_width: int = 1
+    hbkm_branch: int = 8
+    hbkm_lam: float = 1.0
+    # H(q, V_i) measurement (Def. 4): "greedy" = Algorithm-1 path length
+    # (the paper's implementation — long for bad entries, short for good
+    # ones, highly discriminative); "bfs" = literal shortest-path hops
+    # (small-world diameters make it nearly constant — kept for ablation).
+    hop_mode: str = "greedy"
+    hop_beam: int = 8
+    hop_max: int = 48
+    # entry selection: hub sets up to this size score every hub with one
+    # twotower_score matmul; larger sets use the nav-graph cosine descent
+    flat_score_max: int = 128
+    # ablations (§5.2 Exp-2)
+    use_hbkm: bool = True        # False → GATE w/o H (plain k-means hubs)
+    use_fusion: bool = True      # False → GATE w/o FE
+    use_contrastive: bool = True # False → GATE w/o L (untrained towers)
+    seed: int = 0
+
+
+@dataclass
+class GateIndex:
+    db: np.ndarray
+    neighbors: np.ndarray          # base-graph padded adjacency
+    enter_id: int                  # base-graph default entry (for baselines)
+    hubs: HubSet
+    tower_params: Dict
+    tower_cfg: TwoTowerConfig
+    nav: ng.NavGraph
+    gcfg: GateConfig
+    build_report: Dict = field(default_factory=dict)
+
+    # device-side caches
+    _dev: Optional[dict] = None
+
+    # ------------------------------------------------------------------ build
+    @classmethod
+    def from_graph(
+        cls,
+        db: np.ndarray,
+        neighbors: np.ndarray,
+        enter_id: int,
+        train_queries: np.ndarray,
+        gcfg: GateConfig = GateConfig(),
+    ) -> "GateIndex":
+        report = {}
+        t0 = time.time()
+        if gcfg.use_hbkm:
+            hubs = extract_hubs(
+                db, gcfg.n_hubs, branch_k=gcfg.hbkm_branch,
+                lam=gcfg.hbkm_lam, seed=gcfg.seed,
+            )
+        else:
+            hubs = kmeans_hubs(db, gcfg.n_hubs, seed=gcfg.seed)
+        report["t_hubs"] = time.time() - t0
+
+        t0 = time.time()
+        sgs = sample_all_subgraphs(
+            db, neighbors, hubs.ids, h=gcfg.h,
+            max_nodes=gcfg.subgraph_max_nodes, seed=gcfg.seed,
+        )
+        u_toks = embed_all(sgs, gcfg.d_u, wl_iters=gcfg.wl_iters, seed=gcfg.seed)
+        report["t_topo"] = time.time() - t0
+        report["subgraph_nodes_mean"] = float(
+            np.mean([len(s.nodes) for s in sgs])
+        )
+
+        t0 = time.time()
+        targets = top1_targets(db, train_queries)
+        if gcfg.hop_mode == "greedy":
+            from repro.core.samples import greedy_hops
+
+            hops = greedy_hops(
+                db, neighbors, train_queries, hubs.ids, targets,
+                beam_width=gcfg.hop_beam, max_hops=gcfg.hop_max,
+            )
+        else:
+            hops = hop_counts(neighbors, targets, hubs.ids)
+        samples = make_samples(
+            hops, t_pos=gcfg.t_pos, t_neg=gcfg.t_neg, seed=gcfg.seed
+        )
+        report["t_samples"] = time.time() - t0
+        report["samples"] = samples.stats()
+
+        tcfg = TwoTowerConfig(
+            d_p=db.shape[1], d_u=gcfg.d_u, use_fusion=gcfg.use_fusion,
+            lr=gcfg.lr,
+        )
+        t0 = time.time()
+        if gcfg.use_contrastive:
+            params, train_rep = train_two_tower(
+                tcfg, db[hubs.ids], u_toks, train_queries, samples,
+                epochs=gcfg.epochs, batch_hubs=gcfg.batch_hubs, seed=gcfg.seed,
+            )
+            report["loss_first"] = train_rep.losses[0]
+            report["loss_last"] = train_rep.losses[-1]
+        else:  # ablation GATE w/o L: random-init towers, no training
+            from repro.core.twotower import init_params
+
+            params = init_params(tcfg, jax.random.PRNGKey(gcfg.seed))
+        report["t_train"] = time.time() - t0
+
+        reps = np.asarray(
+            hub_tower(params, tcfg, jnp.asarray(db[hubs.ids], jnp.float32),
+                      jnp.asarray(u_toks, jnp.float32))
+        )
+        nav = ng.build_nav_graph(reps, s=gcfg.s_edges)
+        return cls(
+            db=db, neighbors=neighbors, enter_id=enter_id, hubs=hubs,
+            tower_params=params, tower_cfg=tcfg, nav=nav, gcfg=gcfg,
+            build_report=report,
+        )
+
+    @classmethod
+    def build(
+        cls,
+        db: np.ndarray,
+        train_queries: np.ndarray,
+        gcfg: GateConfig = GateConfig(),
+        nsg: Optional[NSG] = None,
+        **nsg_kw,
+    ) -> "GateIndex":
+        nsg = nsg or build_nsg(db, **nsg_kw)
+        return cls.from_graph(
+            db, nsg.neighbors, nsg.enter_id, train_queries, gcfg
+        )
+
+    # ----------------------------------------------------------------- search
+    def _device(self):
+        if self._dev is None:
+            self._dev = {
+                "db": jnp.asarray(self.db),
+                "neighbors": jnp.asarray(self.neighbors),
+                "hub_ids": jnp.asarray(self.hubs.ids, jnp.int32),
+                "nav": ng.NavGraphDevice.from_host(self.nav),
+            }
+        return self._dev
+
+    def select_entries(self, queries: jax.Array) -> jax.Array:
+        """(B, probe_width) base-graph entry ids chosen by the model.
+
+        Small hub sets: one fused twotower_score matmul over every hub
+        (kernels/twotower_score on TPU).  Large hub sets: greedy cosine
+        descent on the navigation graph (avoids |V| scores per query)."""
+        dev = self._device()
+        z_q = query_tower(
+            self.tower_params, self.tower_cfg,
+            jnp.asarray(queries, jnp.float32),
+        )
+        w = self.gcfg.probe_width
+        if self.hubs.n <= self.gcfg.flat_score_max:
+            from repro.kernels import ops
+
+            scores = ops.twotower_score(z_q, dev["nav"].reps)
+            if w == 1:
+                hub_local = jnp.argmax(scores, axis=1)[:, None]
+            else:
+                _, hub_local = jax.lax.top_k(scores, w)
+        else:
+            hub_local = ng.descend(dev["nav"], z_q, probe_width=w)
+        return dev["hub_ids"][hub_local]
+
+    def search(
+        self,
+        queries: np.ndarray,
+        k: int = 10,
+        *,
+        beam_width: int = 64,
+        max_hops: int = 256,
+    ) -> SearchResult:
+        dev = self._device()
+        entries = self.select_entries(queries)
+        return batched_search(
+            dev["db"], dev["neighbors"], jnp.asarray(queries), entries,
+            beam_width=beam_width, max_hops=max_hops, k=k,
+        )
+
+    def search_baseline(
+        self,
+        queries: np.ndarray,
+        k: int = 10,
+        *,
+        beam_width: int = 64,
+        max_hops: int = 256,
+        entry: str = "medoid",
+    ) -> SearchResult:
+        """Underlying-index search without GATE (entry ∈ {medoid, random})."""
+        dev = self._device()
+        B = len(queries)
+        if entry == "medoid":
+            entries = jnp.full((B, 1), self.enter_id, jnp.int32)
+        elif entry == "random":
+            rng = np.random.default_rng(0)
+            entries = jnp.asarray(
+                rng.integers(0, len(self.db), (B, 1)), jnp.int32
+            )
+        else:
+            raise ValueError(entry)
+        return batched_search(
+            dev["db"], dev["neighbors"], jnp.asarray(queries), entries,
+            beam_width=beam_width, max_hops=max_hops, k=k,
+        )
+
+    # ------------------------------------------------------------ persistence
+    def save(self, path: str):
+        state = {
+            "db": self.db, "neighbors": self.neighbors,
+            "enter_id": self.enter_id,
+            "hubs": (self.hubs.ids, self.hubs.assign, self.hubs.centroids),
+            "tower_params": jax.tree.map(np.asarray, self.tower_params),
+            "tower_cfg": self.tower_cfg, "gcfg": self.gcfg,
+            "nav": (self.nav.neighbors, self.nav.reps, self.nav.start),
+            "build_report": self.build_report,
+        }
+        with open(path, "wb") as f:
+            pickle.dump(state, f)
+
+    @classmethod
+    def load(cls, path: str) -> "GateIndex":
+        with open(path, "rb") as f:
+            s = pickle.load(f)
+        return cls(
+            db=s["db"], neighbors=s["neighbors"], enter_id=s["enter_id"],
+            hubs=HubSet(*s["hubs"]),
+            tower_params=s["tower_params"], tower_cfg=s["tower_cfg"],
+            nav=ng.NavGraph(*s["nav"]), gcfg=s["gcfg"],
+            build_report=s["build_report"],
+        )

@@ -1,0 +1,74 @@
+"""Hub node extraction (paper Definition 3).
+
+Partition the database into ``n_c`` balanced clusters with HBKM, then pick
+each cluster's medoid (nearest base vector to the centroid) as its hub node.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import numpy as np
+
+from repro.core.hbkm import hbkm
+from repro.graphs.knn import exact_knn
+
+
+@dataclass
+class HubSet:
+    ids: np.ndarray        # (n_c,) base-db indices of hub nodes
+    assign: np.ndarray     # (n,) cluster id per base vector
+    centroids: np.ndarray  # (n_c, d)
+
+    @property
+    def n(self) -> int:
+        return len(self.ids)
+
+
+def extract_hubs(
+    db: np.ndarray,
+    n_c: int,
+    *,
+    branch_k: int = 8,
+    lam: float = 1.0,
+    iters: int = 8,
+    seed: int = 0,
+) -> HubSet:
+    assign, centroids = hbkm(
+        db, n_c, branch_k=branch_k, lam=lam, iters=iters, seed=seed
+    )
+    n_c_eff = centroids.shape[0]
+    # medoid per cluster: nearest base vector (restricted to the cluster)
+    ids = np.zeros(n_c_eff, np.int64)
+    for c in range(n_c_eff):
+        members = np.where(assign == c)[0]
+        if len(members) == 0:  # defensive: empty cluster → global nearest
+            nn, _ = exact_knn(centroids[c : c + 1].astype(db.dtype), db, 1)
+            ids[c] = int(nn[0, 0])
+            continue
+        local, _ = exact_knn(
+            centroids[c : c + 1].astype(db.dtype), db[members], 1
+        )
+        ids[c] = int(members[local[0, 0]])
+    return HubSet(ids=ids.astype(np.int64), assign=assign, centroids=centroids)
+
+
+def kmeans_hubs(db: np.ndarray, n_c: int, seed: int = 0, iters: int = 8) -> HubSet:
+    """Ablation baseline (GATE w/o H): plain (unbalanced) k-means medoids."""
+    from repro.core.hbkm import balanced_kmeans
+
+    assign, centroids = balanced_kmeans(
+        db, n_c, lam=0.0, iters=iters, seed=seed
+    )
+    hs = HubSet(ids=np.zeros(n_c, np.int64), assign=assign, centroids=centroids)
+    for c in range(n_c):
+        members = np.where(assign == c)[0]
+        if len(members) == 0:
+            nn, _ = exact_knn(centroids[c : c + 1].astype(db.dtype), db, 1)
+            hs.ids[c] = int(nn[0, 0])
+            continue
+        local, _ = exact_knn(
+            centroids[c : c + 1].astype(db.dtype), db[members], 1
+        )
+        hs.ids[c] = int(members[local[0, 0]])
+    return hs

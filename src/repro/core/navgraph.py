@@ -1,0 +1,102 @@
+"""GATE navigation graph: connect each hub to its ``s`` most cosine-similar
+hubs *in the learned latent space*, so a tiny greedy cosine search replaces
+|V| model inferences per query (paper §4.3, "Connecting edges between hub
+nodes")."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class NavGraph:
+    neighbors: np.ndarray  # (n_c, s) int32 hub-local ids
+    reps: np.ndarray       # (n_c, d_out) L2-normalized hub latent reps
+    start: int             # fixed entry hub for the greedy cosine descent
+
+
+def build_nav_graph(hub_reps: np.ndarray, s: int = 8) -> NavGraph:
+    """hub_reps must be L2-normalized (hub tower output)."""
+    n_c = hub_reps.shape[0]
+    s = min(s, n_c - 1)
+    sim = hub_reps @ hub_reps.T  # cosine (normalized)
+    np.fill_diagonal(sim, -np.inf)
+    nbrs = np.argsort(-sim, axis=1)[:, :s].astype(np.int32)
+    # start hub: medoid in latent space (max mean similarity — most central)
+    np.fill_diagonal(sim, 0.0)
+    start = int(np.argmax(sim.mean(axis=1)))
+    return NavGraph(neighbors=nbrs, reps=hub_reps.astype(np.float32), start=start)
+
+
+def descend(
+    nav: "NavGraphDevice",
+    z_q: jax.Array,  # (B, d_out) normalized query reps
+    *,
+    max_hops: int = 16,
+    probe_width: int = 1,
+) -> jax.Array:
+    """Greedy cosine walk per query → hub-local entry id(s) (B, probe_width).
+
+    probe_width > 1 returns the best hubs along the walk (beam-1 search with
+    a top-w trace), letting the base search start from several entries.
+    """
+    reps, nbrs = nav.reps, nav.neighbors
+    n_c, s = nbrs.shape
+
+    def one(zq):
+        def cos(ids):
+            return reps[ids] @ zq  # reps normalized
+
+        start = nav.start
+        trace_ids = jnp.full((max_hops + 1,), -1, jnp.int32)
+        trace_sim = jnp.full((max_hops + 1,), -jnp.inf, jnp.float32)
+        c0 = cos(jnp.asarray(start)[None])[0]
+        trace_ids = trace_ids.at[0].set(start)
+        trace_sim = trace_sim.at[0].set(c0)
+
+        def cond(st):
+            cur, cur_s, done, h, ti, ts = st
+            return (~done) & (h < max_hops)
+
+        def step(st):
+            cur, cur_s, done, h, ti, ts = st
+            cand = nbrs[cur]
+            cs = cos(cand)
+            j = jnp.argmax(cs)
+            better = cs[j] > cur_s
+            nxt = jnp.where(better, cand[j], cur)
+            nxt_s = jnp.where(better, cs[j], cur_s)
+            ti = ti.at[h + 1].set(jnp.where(better, cand[j], -1))
+            ts = ts.at[h + 1].set(jnp.where(better, cs[j], -jnp.inf))
+            return nxt, nxt_s, ~better, h + 1, ti, ts
+
+        st = (jnp.asarray(start, jnp.int32), c0, jnp.zeros((), bool),
+              jnp.zeros((), jnp.int32), trace_ids, trace_sim)
+        cur, cur_s, _, _, ti, ts = jax.lax.while_loop(cond, step, st)
+        if probe_width == 1:
+            return cur[None]
+        order = jnp.argsort(-ts)[:probe_width]
+        picked = ti[order]
+        return jnp.where(picked < 0, cur, picked)
+
+    return jax.vmap(one)(z_q)
+
+
+@dataclass
+class NavGraphDevice:
+    """Device-resident nav graph (jnp arrays) for jit'd search."""
+
+    reps: jax.Array
+    neighbors: jax.Array
+    start: int
+
+    @classmethod
+    def from_host(cls, nav: NavGraph) -> "NavGraphDevice":
+        return cls(
+            reps=jnp.asarray(nav.reps),
+            neighbors=jnp.asarray(nav.neighbors),
+            start=int(nav.start),
+        )

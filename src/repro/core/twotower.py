@@ -1,0 +1,204 @@
+"""Contrastive two-tower model (paper §4.3).
+
+Module I — Fusion Embedding Augmentation (Eq. 3): multi-head attention with
+the hub's base vector ``p`` as the query and its WL topology tokens
+``U ∈ (T, d_u)`` as keys/values; heads concatenated through ``W_O``; residual
+with a learned projection of ``p`` so the fused embedding keeps absolute
+position information.
+
+Module II — Projection Network: two MLP towers (hub side on the fused
+embedding, query side on raw query vectors) into a shared latent space;
+normalized dot product = cosine similarity; InfoNCE loss (Eq. 4) with the
+hub's positive/negative query queues.
+
+Everything is plain JAX (dict params + repro.train.optim Adam) and jit-able;
+the heavy ops are batched matmuls (MXU-friendly).  Online inference cost per
+query batch is ONE query-tower MLP — hub representations are precomputed.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.train.optim import adamw
+
+Params = Dict[str, jax.Array]
+
+
+@dataclass(frozen=True)
+class TwoTowerConfig:
+    d_p: int            # base-vector dim
+    d_u: int = 64       # topology-feature dim
+    d_k: int = 32       # per-head attention dim
+    n_heads: int = 4
+    d_fusion: int = 128
+    d_hidden: int = 256
+    d_out: int = 128    # shared latent dim
+    tau: float = 0.07
+    lr: float = 5e-5
+    use_fusion: bool = True  # ablation: GATE w/o FE
+
+
+def init_params(cfg: TwoTowerConfig, key: jax.Array) -> Params:
+    ks = jax.random.split(key, 12)
+    m, dk = cfg.n_heads, cfg.d_k
+    g = jax.nn.initializers.glorot_normal()
+    p: Params = {
+        # Eq. 3 fusion attention
+        "wq": g(ks[0], (cfg.d_p, m, dk), jnp.float32),
+        "wk": g(ks[1], (cfg.d_u, m, dk), jnp.float32),
+        "wv": g(ks[2], (cfg.d_u, m, dk), jnp.float32),
+        "wo": g(ks[3], (m * dk, cfg.d_fusion), jnp.float32),
+        "wp": g(ks[4], (cfg.d_p, cfg.d_fusion), jnp.float32),  # residual path
+        # hub tower MLP
+        "h1": g(ks[5], (cfg.d_fusion, cfg.d_hidden), jnp.float32),
+        "hb1": jnp.zeros((cfg.d_hidden,), jnp.float32),
+        "h2": g(ks[6], (cfg.d_hidden, cfg.d_out), jnp.float32),
+        "hb2": jnp.zeros((cfg.d_out,), jnp.float32),
+        # query tower MLP
+        "q1": g(ks[7], (cfg.d_p, cfg.d_hidden), jnp.float32),
+        "qb1": jnp.zeros((cfg.d_hidden,), jnp.float32),
+        "q2": g(ks[8], (cfg.d_hidden, cfg.d_out), jnp.float32),
+        "qb2": jnp.zeros((cfg.d_out,), jnp.float32),
+    }
+    return p
+
+
+def fusion_embed(params: Params, cfg: TwoTowerConfig,
+                 p_hub: jax.Array, u_toks: jax.Array) -> jax.Array:
+    """Eq. 3. p_hub: (B, d_p); u_toks: (B, T, d_u) → (B, d_fusion)."""
+    if not cfg.use_fusion:  # ablation: skip topology injection
+        return p_hub @ params["wp"]
+    q = jnp.einsum("bd,dmk->bmk", p_hub, params["wq"])          # (B, m, dk)
+    k = jnp.einsum("btd,dmk->btmk", u_toks, params["wk"])       # (B, T, m, dk)
+    v = jnp.einsum("btd,dmk->btmk", u_toks, params["wv"])
+    scores = jnp.einsum("bmk,btmk->bmt", q, k) / np.sqrt(cfg.d_k)
+    attn = jax.nn.softmax(scores, axis=-1)
+    heads = jnp.einsum("bmt,btmk->bmk", attn, v)                # (B, m, dk)
+    fused = heads.reshape(heads.shape[0], -1) @ params["wo"]
+    return fused + p_hub @ params["wp"]  # keep absolute spatial info
+
+
+def hub_tower(params: Params, cfg: TwoTowerConfig,
+              p_hub: jax.Array, u_toks: jax.Array) -> jax.Array:
+    """(B, d_out) L2-normalized hub representations."""
+    f = fusion_embed(params, cfg, p_hub, u_toks)
+    h = jax.nn.relu(f @ params["h1"] + params["hb1"])
+    z = h @ params["h2"] + params["hb2"]
+    return z / jnp.maximum(jnp.linalg.norm(z, axis=-1, keepdims=True), 1e-9)
+
+
+def query_tower(params: Params, cfg: TwoTowerConfig, q: jax.Array) -> jax.Array:
+    """(B, d_out) L2-normalized query representations."""
+    h = jax.nn.relu(q @ params["q1"] + params["qb1"])
+    z = h @ params["q2"] + params["qb2"]
+    return z / jnp.maximum(jnp.linalg.norm(z, axis=-1, keepdims=True), 1e-9)
+
+
+def info_nce(params: Params, cfg: TwoTowerConfig, batch) -> jax.Array:
+    """Eq. 4 over a batch of hubs.
+
+    batch: dict with
+      p_hub   (B, d_p), u_toks (B, T, d_u),
+      q_pos   (B, P, d_p)  positive queries (padded),  pos_mask (B, P),
+      q_neg   (B, M, d_p)  negative queries (padded),  neg_mask (B, M)
+    """
+    z_hub = hub_tower(params, cfg, batch["p_hub"], batch["u_toks"])  # (B, o)
+    B, P, _ = batch["q_pos"].shape
+    M = batch["q_neg"].shape[1]
+    z_pos = query_tower(params, cfg, batch["q_pos"].reshape(B * P, -1))
+    z_neg = query_tower(params, cfg, batch["q_neg"].reshape(B * M, -1))
+    s_pos = jnp.einsum(
+        "bo,bpo->bp", z_hub, z_pos.reshape(B, P, -1)
+    ) / cfg.tau
+    s_neg = jnp.einsum(
+        "bo,bmo->bm", z_hub, z_neg.reshape(B, M, -1)
+    ) / cfg.tau
+    NEG = -1e30
+    s_pos = jnp.where(batch["pos_mask"] > 0, s_pos, NEG)
+    s_neg = jnp.where(batch["neg_mask"] > 0, s_neg, NEG)
+    denom = jnp.concatenate([s_pos, s_neg], axis=1)  # (B, P+M)
+    lse = jax.nn.logsumexp(denom, axis=1)            # (B,)
+    # -(1/|P|) Σ_pos log( exp(s_pos) / denom )
+    per_pos = s_pos - lse[:, None]
+    n_pos = jnp.maximum(jnp.sum(batch["pos_mask"], axis=1), 1.0)
+    loss = -jnp.sum(
+        jnp.where(batch["pos_mask"] > 0, per_pos, 0.0), axis=1
+    ) / n_pos
+    has_pos = jnp.sum(batch["pos_mask"], axis=1) > 0
+    return jnp.sum(jnp.where(has_pos, loss, 0.0)) / jnp.maximum(
+        jnp.sum(has_pos), 1
+    )
+
+
+@dataclass
+class TrainReport:
+    losses: list = field(default_factory=list)
+
+
+def train_two_tower(
+    cfg: TwoTowerConfig,
+    hub_vecs: np.ndarray,     # (n_c, d_p)
+    u_toks: np.ndarray,       # (n_c, T, d_u)
+    queries: np.ndarray,      # (Q, d_p)
+    sample_set,               # core.samples.SampleSet
+    *,
+    epochs: int = 200,
+    batch_hubs: int = 64,
+    pos_per_hub: int = 8,
+    neg_per_hub: int = 32,
+    seed: int = 0,
+    params: Optional[Params] = None,
+) -> Tuple[Params, TrainReport]:
+    """Contrastive training (Adam, lr per paper §5.1)."""
+    n_c = hub_vecs.shape[0]
+    key = jax.random.PRNGKey(seed)
+    if params is None:
+        params = init_params(cfg, key)
+    optim = adamw(lr=cfg.lr, b1=0.9, b2=0.999, grad_clip=None)
+    opt_state = optim.init(params)
+
+    @jax.jit
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(info_nce)(params, cfg, batch)
+        params, opt_state, _ = optim.apply(params, grads, opt_state)
+        return params, opt_state, loss
+
+    rng = np.random.default_rng(seed)
+    hub_j = jnp.asarray(hub_vecs, jnp.float32)
+    u_j = jnp.asarray(u_toks, jnp.float32)
+    q_np = queries.astype(np.float32)
+    report = TrainReport()
+    batch_hubs = min(batch_hubs, n_c)
+
+    def sample_queue(queue, want):
+        if len(queue) == 0:
+            return np.zeros(want, np.int64), np.zeros(want, np.float32)
+        take = rng.choice(queue, size=want, replace=len(queue) < want)
+        return take, np.ones(want, np.float32)
+
+    for _ in range(epochs):
+        hubs = rng.choice(n_c, size=batch_hubs, replace=False)
+        qp = np.zeros((batch_hubs, pos_per_hub, q_np.shape[1]), np.float32)
+        qn = np.zeros((batch_hubs, neg_per_hub, q_np.shape[1]), np.float32)
+        pm = np.zeros((batch_hubs, pos_per_hub), np.float32)
+        nm = np.zeros((batch_hubs, neg_per_hub), np.float32)
+        for bi, hi in enumerate(hubs):
+            ip, mp = sample_queue(sample_set.pos[hi], pos_per_hub)
+            im, mn = sample_queue(sample_set.neg[hi], neg_per_hub)
+            qp[bi], pm[bi] = q_np[ip], mp
+            qn[bi], nm[bi] = q_np[im], mn
+        batch = {
+            "p_hub": hub_j[hubs],
+            "u_toks": u_j[hubs],
+            "q_pos": jnp.asarray(qp), "pos_mask": jnp.asarray(pm),
+            "q_neg": jnp.asarray(qn), "neg_mask": jnp.asarray(nm),
+        }
+        params, opt_state, loss = step(params, opt_state, batch)
+        report.losses.append(float(loss))
+    return params, report

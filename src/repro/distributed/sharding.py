@@ -1,0 +1,205 @@
+"""Logical-axis sharding rules (MaxText-style) with divisibility fallback.
+
+Params and activations are annotated with *logical* axis names; a profile maps
+each logical name to mesh axes.  ``resolve_axes`` silently drops mesh axes the
+current mesh doesn't have (so the same rules serve the (data, model) single-pod
+mesh and the (pod, data, model) multi-pod mesh), and falls back to replication
+when the dim size isn't divisible by the mapped axis size — JAX 0.8 rejects
+uneven GSPMD shardings outright.  Every fallback is recorded so the dry-run can
+report the replication waste (a §Perf signal).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisRule = Union[None, str, Tuple[str, ...]]
+
+
+# ---------------------------------------------------------------------------
+# Profiles
+# ---------------------------------------------------------------------------
+
+def _base_rules() -> Dict[str, AxisRule]:
+    return {
+        # -- parameter logical axes ------------------------------------------
+        "layers": None,
+        "stack": None,          # enc/dec stacks, fused qkv, etc.
+        "embed": None,          # d_model dim of weights (FSDP target)
+        "heads": "model",       # query heads (tensor parallel)
+        "kv_heads": None,       # usually <= mesh model size; replicated
+        "head_dim": None,
+        "ff": "model",          # MLP hidden (tensor parallel)
+        "vocab": "model",
+        "experts": None,        # MoE expert dim (EP optional)
+        "state": None,          # SSM state dims
+        "conv": None,
+        "norm": None,
+        "patch": None,
+        # -- activation logical axes -----------------------------------------
+        "act_batch": ("pod", "data"),
+        "act_seq": None,
+        "act_embed": None,
+        "act_heads": "model",
+        "act_ff": "model",
+        "act_vocab": "model",
+        "cache_batch": ("pod", "data"),
+        "cache_seq": None,
+        "cache_heads": None,
+    }
+
+
+@dataclass
+class ShardingProfile:
+    name: str
+    rules: Dict[str, AxisRule] = field(default_factory=_base_rules)
+    notes: List[str] = field(default_factory=list)
+
+    def override(self, **kw: AxisRule) -> "ShardingProfile":
+        r = dict(self.rules)
+        r.update(kw)
+        return ShardingProfile(self.name, r, list(self.notes))
+
+
+def make_profile(kind: str, *, fsdp: bool = True) -> ShardingProfile:
+    """Profiles per shape kind.
+
+    train:   FSDP — params/optimizer sharded over data x model; batch over
+             (pod, data); microbatched grad accumulation upstream.
+    prefill: weights 2D-sharded; batch over data; seq replicated (blockwise
+             attention bounds the score memory).
+    decode:  weights 2D-sharded; batch over data; KV-cache *sequence* sharded
+             over model (flash-decoding split); kv_heads often indivisible.
+    long:    batch=1 — cache sequence sharded over data AND heads over model.
+    """
+    p = ShardingProfile(kind)
+    if kind == "train":
+        p = p.override(embed="data" if fsdp else None)
+    elif kind == "prefill":
+        p = p.override(embed="data")
+    elif kind == "decode":
+        p = p.override(embed="data", cache_seq="model", act_heads=None)
+    elif kind == "decode_serve":
+        # §Perf: serving must NOT keep weights FSDP-sharded — a decode step
+        # re-all-gathers every layer's weights over the data axis per TOKEN
+        # (measured: the dominant collective term on every decode cell).
+        # 2-D weight sharding over the model axis only; batch over data.
+        p = p.override(embed=None, cache_seq="model", act_heads=None)
+    elif kind == "long":
+        p = p.override(
+            embed="data",
+            cache_seq="data",
+            cache_batch=None,
+            cache_heads="model",
+            act_batch=None,
+            act_heads=None,
+        )
+    else:
+        raise ValueError(f"unknown profile kind {kind!r}")
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Resolution
+# ---------------------------------------------------------------------------
+
+def _axis_size(mesh: Mesh, rule: AxisRule) -> int:
+    if rule is None:
+        return 1
+    if isinstance(rule, str):
+        rule = (rule,)
+    n = 1
+    for a in rule:
+        n *= mesh.shape[a]
+    return n
+
+
+def resolve_axes(
+    mesh: Mesh,
+    logical_axes: Sequence[Optional[str]],
+    shape: Sequence[int],
+    profile: ShardingProfile,
+    fallbacks: Optional[List[str]] = None,
+    context: str = "",
+) -> P:
+    """Map logical axis names to a PartitionSpec, respecting divisibility."""
+    spec: List[AxisRule] = []
+    used: set = set()
+    for dim, name in enumerate(logical_axes):
+        rule = profile.rules.get(name) if name is not None else None
+        if rule is None:
+            spec.append(None)
+            continue
+        axes = (rule,) if isinstance(rule, str) else tuple(rule)
+        axes = tuple(a for a in axes if a in mesh.shape and a not in used)
+        if not axes:
+            spec.append(None)
+            continue
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        if shape[dim] % size != 0:
+            # try progressively smaller prefixes of the axis tuple
+            while axes and shape[dim] % size != 0:
+                size //= mesh.shape[axes[-1]]
+                axes = axes[:-1]
+            if not axes:
+                if fallbacks is not None:
+                    fallbacks.append(
+                        f"{context}[{name}] dim={shape[dim]} not divisible by "
+                        f"rule {rule!r}; replicated"
+                    )
+                spec.append(None)
+                continue
+        used.update(axes)
+        spec.append(axes[0] if len(axes) == 1 else tuple(axes))
+    return P(*spec)
+
+
+def named_sharding(
+    mesh: Mesh,
+    logical_axes: Sequence[Optional[str]],
+    shape: Sequence[int],
+    profile: ShardingProfile,
+    fallbacks: Optional[List[str]] = None,
+    context: str = "",
+) -> NamedSharding:
+    return NamedSharding(
+        mesh, resolve_axes(mesh, logical_axes, shape, profile, fallbacks, context)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Activation-constraint context (threaded through model code)
+# ---------------------------------------------------------------------------
+
+class ShardingCtx:
+    """Applies with_sharding_constraint per logical axes; no-op off-mesh."""
+
+    def __init__(self, mesh: Optional[Mesh] = None,
+                 profile: Optional[ShardingProfile] = None):
+        self.mesh = mesh
+        self.profile = profile
+        self.fallbacks: List[str] = []
+
+    def constrain(self, x: jax.Array, logical_axes: Sequence[Optional[str]]):
+        if self.mesh is None or self.profile is None:
+            return x
+        if len(logical_axes) != x.ndim:
+            raise ValueError(
+                f"logical axes {logical_axes} rank != array rank {x.shape}"
+            )
+        spec = resolve_axes(
+            self.mesh, logical_axes, x.shape, self.profile, self.fallbacks,
+            context="act",
+        )
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec)
+        )
+
+
+NULL_CTX = ShardingCtx()

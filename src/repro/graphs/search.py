@@ -1,0 +1,283 @@
+"""Batched greedy beam search over a proximity graph (paper Algorithm 1),
+TPU-native formulation.
+
+The CPU pointer-chasing loop becomes a fixed-shape ``lax.while_loop`` per
+query, vmapped over the batch:
+
+  state = (beam ids (L,), beam dists (L,), expanded flags (L,),
+           visited ring (V,), hops)
+
+Each step expands the best unexpanded beam node: gather its padded neighbor
+row (R,), mask already-seen ids (beam + visited ring), compute distances
+(the kernels/gather_dist hot spot), merge-and-keep top-L.  Terminates when
+every beam slot is expanded (the Algorithm-1 condition) or at max_hops.
+
+Distances are squared L2 (monotone-equivalent to L2).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+INF = jnp.float32(3.4e38)
+
+
+class SearchResult(NamedTuple):
+    ids: jax.Array       # (B, k)
+    dists: jax.Array     # (B, k)
+    hops: jax.Array      # (B,) expansion count (search path length ℓ)
+    dist_evals: jax.Array  # (B,) number of distance computations
+
+
+def _merge_top_l(ids_a, d_a, exp_a, ids_b, d_b):
+    """Merge beam (a) with candidates (b), keep L best unique by distance."""
+    L = ids_a.shape[0]
+    ids = jnp.concatenate([ids_a, ids_b])
+    d = jnp.concatenate([d_a, d_b])
+    expanded = jnp.concatenate([exp_a, jnp.zeros(ids_b.shape, jnp.bool_)])
+    order = jnp.argsort(d)
+    return ids[order][:L], d[order][:L], expanded[order][:L]
+
+
+def beam_search_single(
+    db: jax.Array,          # (N, d)
+    neighbors: jax.Array,   # (N, R) int32, -1 padded
+    q: jax.Array,           # (d,)
+    entry_ids: jax.Array,   # (E,) int32 starting candidates
+    *,
+    beam_width: int,
+    max_hops: int,
+    visited_ring: int = 512,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    L = beam_width
+    R = neighbors.shape[1]
+    qf = q.astype(jnp.float32)
+
+    def dist_to(ids):
+        vecs = db[jnp.maximum(ids, 0)].astype(jnp.float32)
+        d = jnp.sum((vecs - qf) ** 2, axis=-1)
+        return jnp.where(ids < 0, INF, d)
+
+    e_d = dist_to(entry_ids)
+    pad = L - entry_ids.shape[0]
+    beam_ids = jnp.concatenate(
+        [entry_ids, jnp.full((pad,), -1, jnp.int32)]
+    ) if pad > 0 else entry_ids[:L]
+    beam_d = jnp.concatenate([e_d, jnp.full((max(pad, 0),), INF)])[:L]
+    order = jnp.argsort(beam_d)
+    beam_ids, beam_d = beam_ids[order], beam_d[order]
+    expanded = jnp.zeros((L,), jnp.bool_)
+    ring = jnp.full((visited_ring,), -1, jnp.int32)
+    hops = jnp.zeros((), jnp.int32)
+    evals = jnp.asarray(entry_ids.shape[0], jnp.int32)
+
+    def cond(state):
+        beam_ids, beam_d, expanded, ring, hops, evals = state
+        frontier = (~expanded) & (beam_ids >= 0)
+        return jnp.any(frontier) & (hops < max_hops)
+
+    def step(state):
+        beam_ids, beam_d, expanded, ring, hops, evals = state
+        masked = jnp.where(expanded | (beam_ids < 0), INF, beam_d)
+        j = jnp.argmin(masked)
+        p = beam_ids[j]
+        expanded = expanded.at[j].set(True)
+        ring = ring.at[hops % visited_ring].set(p)
+        nbrs = neighbors[jnp.maximum(p, 0)]  # (R,)
+        # dedup against beam + visited ring
+        seen_beam = jnp.any(nbrs[:, None] == beam_ids[None, :], axis=1)
+        seen_ring = jnp.any(nbrs[:, None] == ring[None, :], axis=1)
+        valid = (nbrs >= 0) & ~seen_beam & ~seen_ring
+        d_n = dist_to(jnp.where(valid, nbrs, -1))
+        evals = evals + jnp.sum(valid.astype(jnp.int32))
+        beam_ids, beam_d, expanded = _merge_top_l(
+            beam_ids, beam_d, expanded, jnp.where(valid, nbrs, -1), d_n
+        )
+        return beam_ids, beam_d, expanded, ring, hops + 1, evals
+
+    state = (beam_ids, beam_d, expanded, ring, hops, evals)
+    beam_ids, beam_d, expanded, ring, hops, evals = jax.lax.while_loop(
+        cond, step, state
+    )
+    return beam_ids, beam_d, hops, evals
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("beam_width", "max_hops", "k", "visited_ring"),
+)
+def batched_search(
+    db: jax.Array,
+    neighbors: jax.Array,
+    queries: jax.Array,    # (B, d)
+    entry_ids: jax.Array,  # (B, E)
+    *,
+    beam_width: int = 64,
+    max_hops: int = 256,
+    k: int = 10,
+    visited_ring: int = 512,
+) -> SearchResult:
+    fn = functools.partial(
+        beam_search_single,
+        db,
+        neighbors,
+        beam_width=beam_width,
+        max_hops=max_hops,
+        visited_ring=visited_ring,
+    )
+    beam_ids, beam_d, hops, evals = jax.vmap(fn)(queries, entry_ids)
+    return SearchResult(beam_ids[:, :k], beam_d[:, :k], hops, evals)
+
+
+def beam_search_fixed(
+    db: jax.Array,          # (N, d)
+    neighbors: jax.Array,   # (N, R)
+    q: jax.Array,           # (d,)
+    entry_ids: jax.Array,   # (E,)
+    *,
+    beam_width: int,
+    num_hops: int,
+    visited_ring: int = 256,
+    expand_width: int = 1,
+    db_norms: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Fixed-trip-count variant (lax.scan over hops) for batch serving:
+    every query runs exactly ``num_hops`` expansions in lockstep — the TPU
+    deployment mode (static latency, static HLO trip counts for roofline).
+    Already-converged lanes expand their best node idempotently.
+
+    ``expand_width`` E > 1 expands the E best unexpanded beam nodes per hop
+    (wavefront expansion): per-hop fixed overhead (argmin/ring/merge) is
+    amortized over E·R candidates, cutting the hop count ~E× for the same
+    total node expansions.
+
+    Distances use the dot form ‖v‖² − 2 v·q + ‖q‖²: the contraction lands on
+    the MXU (kernels/gather_dist fuses it with the mask on real TPU).
+    ``db_norms`` (precomputed ‖v‖², the classic ANNS norms-cache) keeps the
+    gathered vectors in their storage dtype end-to-end — without it XLA
+    hoists a fp32 convert of the ENTIRE db shard out of the hop loop
+    (measured +2.1 GiB footprint and +4.3 GB traffic on search_1b).
+    """
+    L = beam_width
+    E = expand_width
+    qf = q.astype(jnp.float32)
+    qn = jnp.sum(qf * qf)
+
+    def dist_to(ids):
+        vecs = db[jnp.maximum(ids, 0)]       # storage dtype (bf16 ok)
+        vq = jax.lax.dot_general(            # MXU, fp32 accumulation
+            vecs, q.astype(vecs.dtype), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        if db_norms is not None:
+            vn = db_norms[jnp.maximum(ids, 0)]
+        else:
+            vf = vecs.astype(jnp.float32)
+            vn = jnp.sum(vf * vf, axis=-1)
+        d = jnp.maximum(vn - 2.0 * vq + qn, 0.0)
+        return jnp.where(ids < 0, INF, d)
+
+    e_d = dist_to(entry_ids)
+    pad = L - entry_ids.shape[0]
+    beam_ids = jnp.concatenate(
+        [entry_ids, jnp.full((max(pad, 0),), -1, jnp.int32)]
+    )[:L]
+    beam_d = jnp.concatenate([e_d, jnp.full((max(pad, 0),), INF)])[:L]
+    order = jnp.argsort(beam_d)
+    state = (
+        beam_ids[order], beam_d[order], jnp.zeros((L,), jnp.bool_),
+        jnp.full((visited_ring,), -1, jnp.int32),
+    )
+
+    def step(state, h):
+        beam_ids, beam_d, expanded, ring = state
+        masked = jnp.where(expanded | (beam_ids < 0), INF, beam_d)
+        if E == 1:
+            j = jnp.argmin(masked)[None]
+        else:
+            _, j = jax.lax.top_k(-masked, E)   # E best unexpanded
+        p = beam_ids[j]                         # (E,)
+        expanded = expanded.at[j].set(True)
+        ring = jax.lax.dynamic_update_slice(
+            ring, p, ((h * E) % visited_ring,)
+        )
+        nbrs = neighbors[jnp.maximum(p, 0)].reshape(-1)  # (E*R,)
+        seen_beam = jnp.any(nbrs[:, None] == beam_ids[None, :], axis=1)
+        seen_ring = jnp.any(nbrs[:, None] == ring[None, :], axis=1)
+        dup = jnp.zeros_like(nbrs, jnp.bool_)
+        if E > 1:  # dedup within the expanded batch
+            eq = nbrs[:, None] == nbrs[None, :]
+            first = jnp.argmax(eq, axis=1)  # first occurrence index
+            dup = first != jnp.arange(nbrs.shape[0])
+        valid = (
+            (nbrs >= 0) & ~seen_beam & ~seen_ring & ~dup
+            & (p.repeat(neighbors.shape[1]) >= 0)
+        )
+        d_n = dist_to(jnp.where(valid, nbrs, -1))
+        beam_ids, beam_d, expanded = _merge_top_l(
+            beam_ids, beam_d, expanded, jnp.where(valid, nbrs, -1), d_n
+        )
+        return (beam_ids, beam_d, expanded, ring), None
+
+    (beam_ids, beam_d, _, _), _ = jax.lax.scan(
+        step, state, jnp.arange(num_hops)
+    )
+    return beam_ids, beam_d, jnp.asarray(num_hops * E, jnp.int32)
+
+
+def greedy_descent(
+    vecs: jax.Array,       # (M, d) node vectors (e.g. hub nodes)
+    neighbors: jax.Array,  # (M, s) int32
+    q: jax.Array,          # (d,)
+    start: jax.Array,      # () int32
+    max_hops: int = 32,
+    metric: str = "l2",
+) -> jax.Array:
+    """Pure greedy walk to a local minimum (1-best, no beam). Used for the
+    GATE navigation graph where s is tiny. Returns node id."""
+    qf = q.astype(jnp.float32)
+
+    if metric == "l2":
+        def dist(ids):
+            v = vecs[jnp.maximum(ids, 0)].astype(jnp.float32)
+            d = jnp.sum((v - qf) ** 2, axis=-1)
+            return jnp.where(ids < 0, INF, d)
+    elif metric == "cosine":
+        qn = qf / jnp.maximum(jnp.linalg.norm(qf), 1e-9)
+
+        def dist(ids):
+            v = vecs[jnp.maximum(ids, 0)].astype(jnp.float32)
+            v = v / jnp.maximum(
+                jnp.linalg.norm(v, axis=-1, keepdims=True), 1e-9
+            )
+            d = 1.0 - v @ qn
+            return jnp.where(ids < 0, INF, d)
+    else:
+        raise ValueError(metric)
+
+    def cond(state):
+        cur, cur_d, done, h = state
+        return (~done) & (h < max_hops)
+
+    def step(state):
+        cur, cur_d, done, h = state
+        nbrs = neighbors[cur]
+        d_n = dist(nbrs)
+        j = jnp.argmin(d_n)
+        better = d_n[j] < cur_d
+        return (
+            jnp.where(better, nbrs[j], cur),
+            jnp.where(better, d_n[j], cur_d),
+            ~better,
+            h + 1,
+        )
+
+    d0 = dist(start[None])[0]
+    cur, _, _, _ = jax.lax.while_loop(
+        cond, step, (start, d0, jnp.zeros((), jnp.bool_), jnp.zeros((), jnp.int32))
+    )
+    return cur

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the ANNS hot loop (validated in interpret mode on
+CPU; dispatched through kernels.ops):
+
+  l2dist          (Q,d)×(C,d) → (Q,C) squared-L2 on the MXU
+  topk            iterative masked-argmin small-k selection
+  gather_dist     fused neighbor-expansion masked distance
+  twotower_score  fused normalize + cosine scores (GATE entry selection)
+"""
+from repro.kernels.ops import gather_dist, l2dist, topk_min, twotower_score
+
+__all__ = ["gather_dist", "l2dist", "topk_min", "twotower_score"]

@@ -1,0 +1,71 @@
+"""Small-k selection kernel: iterative masked argmin over distance rows.
+
+For beam-search k (≤ 64) a k-pass masked argmin beats a full sort: each pass
+is one VPU min-reduction + one compare over the row tile, all in VMEM.
+
+Tiling: grid (B/TB,); each block holds (TB, C) distances in VMEM (C is the
+candidate count per row — beam_width + R in the search loop, ≤ a few
+thousand), runs k passes of:  m = min(row); idx = first position of m;
+emit (m, idx); row[idx] ← +inf.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_B = 128
+INF = 3.4e38  # python float: jnp scalars would be captured kernel constants
+
+
+def _topk_kernel(d_ref, vals_ref, idx_ref, *, k: int):
+    d = d_ref[...].astype(jnp.float32)  # (TB, C)
+    TB, C = d.shape
+    cols = jax.lax.broadcasted_iota(jnp.int32, (TB, C), 1)
+
+    def body(i, d):
+        m = jnp.min(d, axis=1)                                   # (TB,)
+        hit = d == m[:, None]
+        idx = jnp.min(jnp.where(hit, cols, C), axis=1)           # first hit
+        vals_ref[:, i] = m
+        idx_ref[:, i] = idx.astype(jnp.int32)
+        return jnp.where(cols == idx[:, None], INF, d)
+
+    jax.lax.fori_loop(0, k, body, d, unroll=True)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "tile_b", "interpret"))
+def topk_min(
+    d: jax.Array,  # (B, C) distances; +inf marks invalid
+    k: int,
+    *,
+    tile_b: int = TILE_B,
+    interpret: bool = False,
+):
+    """Returns (vals (B,k) ascending, idx (B,k) int32). Ties → lowest index."""
+    B, C = d.shape
+    tile_b = min(tile_b, max((B + 7) // 8 * 8, 8))
+    Bp = (B + tile_b - 1) // tile_b * tile_b
+    Cp = max((C + 127) // 128 * 128, 128)
+    dp = jnp.pad(
+        d.astype(jnp.float32), ((0, Bp - B), (0, Cp - C)),
+        constant_values=INF,
+    )
+    grid = (Bp // tile_b,)
+    vals, idx = pl.pallas_call(
+        functools.partial(_topk_kernel, k=k),
+        grid=grid,
+        in_specs=[pl.BlockSpec((tile_b, Cp), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((tile_b, k), lambda i: (i, 0)),
+            pl.BlockSpec((tile_b, k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bp, k), jnp.float32),
+            jax.ShapeDtypeStruct((Bp, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(dp)
+    return vals[:B], idx[:B]

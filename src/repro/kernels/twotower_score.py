@@ -1,0 +1,70 @@
+"""Fused normalize + cosine-score kernel (GATE entry selection).
+
+``sim(q, h) = (q/‖q‖) · (h/‖h‖)`` over query batch × hub set: one MXU matmul
+with both normalizations fused in-kernel, so the normalized copies never
+round-trip HBM (XLA emits them as separate materialized tensors).
+
+Tiling: grid (B/TB, H/TH); d is taken whole per block (hub latent dims are
+small — d_out ≤ 512), so norms are exact within one step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_B = 128
+TILE_H = 128
+
+
+def _twotower_kernel(q_ref, h_ref, out_ref):
+    q = q_ref[...].astype(jnp.float32)  # (TB, d)
+    h = h_ref[...].astype(jnp.float32)  # (TH, d)
+    qn = q * jax.lax.rsqrt(
+        jnp.maximum(jnp.sum(q * q, axis=1, keepdims=True), 1e-18)
+    )
+    hn = h * jax.lax.rsqrt(
+        jnp.maximum(jnp.sum(h * h, axis=1, keepdims=True), 1e-18)
+    )
+    out_ref[...] = jax.lax.dot_general(
+        qn, hn, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tile_b", "tile_h", "interpret")
+)
+def twotower_score(
+    q: jax.Array,  # (B, d) query latents
+    h: jax.Array,  # (H, d) hub latents
+    *,
+    tile_b: int = TILE_B,
+    tile_h: int = TILE_H,
+    interpret: bool = False,
+) -> jax.Array:
+    """(B, H) cosine similarities, fp32."""
+    B, D = q.shape
+    H, D2 = h.shape
+    assert D == D2
+    tile_b = min(tile_b, max((B + 7) // 8 * 8, 8))
+    tile_h = min(tile_h, max((H + 127) // 128 * 128, 128))
+    Bp = (B + tile_b - 1) // tile_b * tile_b
+    Hp = (H + tile_h - 1) // tile_h * tile_h
+    Dp = max((D + 127) // 128 * 128, 128)
+    qp = jnp.pad(q, ((0, Bp - B), (0, Dp - D)))
+    hp = jnp.pad(h, ((0, Hp - H), (0, Dp - D)))
+    out = pl.pallas_call(
+        _twotower_kernel,
+        grid=(Bp // tile_b, Hp // tile_h),
+        in_specs=[
+            pl.BlockSpec((tile_b, Dp), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile_h, Dp), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_b, tile_h), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Bp, Hp), jnp.float32),
+        interpret=interpret,
+    )(qp, hp)
+    return out[:B, :H]

@@ -1,0 +1,222 @@
+"""Cell assembly: (arch × shape × mesh) → jit-able fn + specs + shardings.
+
+This is the single place that decides how every dry-run/launch cell is sharded:
+parameter shardings come from each model's param_table logical axes, batch and
+cache shardings from per-model cache axis tables, all resolved through the
+profile rules with divisibility fallbacks recorded for the roofline report.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.distributed.sharding import (
+    ShardingCtx,
+    ShardingProfile,
+    make_profile,
+    named_sharding,
+)
+from repro.models.model import batch_specs, build_model
+from repro.train.loop import make_train_step, train_state_specs
+from repro.train.optim import adamw
+
+# global-batch microbatch counts for train cells (memory lever; tuned from
+# dry-run memory_analysis — see EXPERIMENTS.md §Dry-run)
+TRAIN_MICROBATCHES: Dict[str, int] = {
+    "mistral-large-123b": 32,
+    "mixtral-8x22b": 16,
+    "internvl2-26b": 16,
+    "qwen2.5-32b": 16,
+    "llama3-8b": 8,
+    "qwen2-moe-a2.7b": 8,
+    "gemma-2b": 4,
+    "zamba2-1.2b": 4,
+    "rwkv6-1.6b": 4,
+    "seamless-m4t-medium": 4,
+}
+
+BATCH_AXES: Dict[str, Tuple] = {
+    "tokens": ("act_batch", None),
+    "labels": ("act_batch", None),
+    "frames": ("act_batch", "act_seq", "act_embed"),
+    "patches": ("act_batch", None, None),
+}
+
+CACHE_AXES: Dict[str, Tuple] = {
+    "k": ("layers", "cache_batch", "cache_seq", "cache_heads", None),
+    "v": ("layers", "cache_batch", "cache_seq", "cache_heads", None),
+    "xk": ("layers", "cache_batch", "cache_seq", "cache_heads", None),
+    "xv": ("layers", "cache_batch", "cache_seq", "cache_heads", None),
+    "pos": ("cache_batch", "cache_seq"),
+    "enc_pos": ("cache_batch", "cache_seq"),
+    "ssm": ("layers", "cache_batch", "cache_heads", None, None),
+    "conv": ("layers", "cache_batch", None, "act_ff"),
+    "wkv": ("layers", "cache_batch", "cache_heads", None, None),
+    "shift_t": ("layers", "cache_batch", None),
+    "shift_c": ("layers", "cache_batch", None),
+}
+
+
+@dataclasses.dataclass
+class Cell:
+    name: str
+    fn: Any  # callable to jit
+    args: Tuple  # ShapeDtypeStructs
+    in_shardings: Tuple
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...]
+    fallbacks: List[str]
+    ctx: ShardingCtx
+
+
+def profile_for(shape: ShapeSpec) -> ShardingProfile:
+    if shape.kind == "train":
+        return make_profile("train")
+    if shape.kind == "prefill":
+        return make_profile("prefill")
+    if shape.name.startswith("long"):
+        return make_profile("long")
+    return make_profile("decode")
+
+
+def param_shardings(model, mesh, profile, fallbacks):
+    table = model.param_table()
+    return {
+        name: named_sharding(
+            mesh, spec.axes, spec.shape, profile, fallbacks, context=name
+        )
+        for name, spec in table.items()
+    }
+
+
+def _tree_shardings(specs, axes_table, mesh, profile, fallbacks, context):
+    out = {}
+    for k, s in specs.items():
+        axes = axes_table.get(k)
+        if axes is None or len(axes) != len(s.shape):
+            axes = (None,) * len(s.shape)
+        out[k] = named_sharding(
+            mesh, axes, s.shape, profile, fallbacks, context=f"{context}/{k}"
+        )
+    return out
+
+
+def build_cell(
+    cfg: ModelConfig,
+    shape: ShapeSpec,
+    mesh,
+    *,
+    profile: Optional[ShardingProfile] = None,
+    num_microbatches: Optional[int] = None,
+) -> Cell:
+    profile = profile or profile_for(shape)
+    fallbacks: List[str] = []
+    ctx = ShardingCtx(mesh, profile)
+    model = build_model(cfg)
+    p_shard = param_shardings(model, mesh, profile, fallbacks)
+    replicated = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+
+    if shape.kind == "train":
+        optim = adamw(lr=3e-4, warmup=100, total_steps=100_000)
+        nm = num_microbatches or TRAIN_MICROBATCHES.get(cfg.name, 4)
+        step = make_train_step(model, optim, num_microbatches=nm, ctx=ctx)
+        state_specs = train_state_specs(model, optim)
+        b_specs = batch_specs(cfg, shape)
+        state_shardings = {
+            "params": p_shard,
+            "opt": {
+                "m": p_shard,
+                "v": p_shard,
+                "step": replicated,
+            },
+        }
+        b_shardings = _tree_shardings(
+            b_specs, BATCH_AXES, mesh, profile, fallbacks, "batch"
+        )
+        metrics_shardings = {
+            k: replicated for k in ("loss", "grad_norm", "ce", "aux")
+        }
+        return Cell(
+            name=f"{cfg.name}:{shape.name}",
+            fn=step,
+            args=(state_specs, b_specs),
+            in_shardings=(state_shardings, b_shardings),
+            out_shardings=(state_shardings, metrics_shardings),
+            donate_argnums=(0,),
+            fallbacks=fallbacks,
+            ctx=ctx,
+        )
+
+    if shape.kind == "prefill":
+        b_specs = batch_specs(cfg, shape)
+        b_shardings = _tree_shardings(
+            b_specs, BATCH_AXES, mesh, profile, fallbacks, "batch"
+        )
+
+        def prefill(params, batch):
+            return model.prefill(params, batch, ctx)
+
+        # out_shardings MUST pin the KV cache to (batch, seq) shards —
+        # unspecified outputs get replicated by GSPMD (measured: 30 GiB of
+        # per-device cache output on mixtral prefill_32k before this)
+        cache_struct = jax.eval_shape(prefill, model.param_specs(), b_specs)
+        logits_s, cache_s = cache_struct
+        logits_shard = named_sharding(
+            mesh, ("act_batch", "act_vocab"), logits_s.shape, profile,
+            fallbacks, "logits",
+        )
+        c_shardings = _tree_shardings(
+            cache_s, CACHE_AXES, mesh, profile, fallbacks, "cache"
+        )
+        return Cell(
+            name=f"{cfg.name}:{shape.name}",
+            fn=prefill,
+            args=(model.param_specs(), b_specs),
+            in_shardings=(p_shard, b_shardings),
+            out_shardings=(logits_shard, c_shardings),
+            donate_argnums=(),
+            fallbacks=fallbacks,
+            ctx=ctx,
+        )
+
+    # decode
+    b_specs = batch_specs(cfg, shape)
+    cache_specs = model.cache_specs(shape.global_batch, shape.seq_len)
+    t_spec = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+    b_shardings = _tree_shardings(
+        b_specs, BATCH_AXES, mesh, profile, fallbacks, "batch"
+    )
+    c_shardings = _tree_shardings(
+        cache_specs, CACHE_AXES, mesh, profile, fallbacks, "cache"
+    )
+    t_shard = named_sharding(
+        mesh, ("cache_batch",), t_spec.shape, profile, fallbacks, "t"
+    )
+
+    def decode(params, tokens, cache, t):
+        return model.decode(params, tokens, cache, t, ctx)
+
+    return Cell(
+        name=f"{cfg.name}:{shape.name}",
+        fn=decode,
+        args=(model.param_specs(), b_specs["tokens"], cache_specs, t_spec),
+        in_shardings=(p_shard, b_shardings["tokens"], c_shardings, t_shard),
+        out_shardings=(None, c_shardings),
+        donate_argnums=(2,),
+        fallbacks=fallbacks,
+        ctx=ctx,
+    )
+
+
+def lower_cell(cell: Cell):
+    jitted = jax.jit(
+        cell.fn,
+        in_shardings=cell.in_shardings,
+        out_shardings=cell.out_shardings,
+        donate_argnums=cell.donate_argnums,
+    )
+    return jitted.lower(*cell.args)

@@ -1,0 +1,220 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the very first lines, before any other import: jax locks the
+#   device count at first init. 512 placeholder host devices back the
+#   production meshes (16x16 single-pod, 2x16x16 multi-pod).
+
+"""Multi-pod dry-run driver.
+
+For every (architecture × input shape × mesh) cell:
+    lowered  = jax.jit(step, in_shardings=…, out_shardings=…).lower(*specs)
+    compiled = lowered.compile()
+    print(compiled.memory_analysis())   # proves it fits
+    print(compiled.cost_analysis())     # FLOPs/bytes for §Roofline
+
+plus the trip-count-corrected HLO analysis (launch/hlo_analysis.py), all
+dumped as JSON for §Dry-run / §Roofline aggregation.
+
+Usage:
+    python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+    python -m repro.launch.dryrun --arch gate-anns --shape search_10b
+    python -m repro.launch.dryrun --all            # every cell, subprocesses
+Options: --multi-pod, --out DIR, --profile {train,prefill,decode,long},
+         --micro N (train microbatches override)
+"""
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+
+def _apply_overrides(cfg, sets):
+    """--set key=value config overrides (int/float/str/bool inferred);
+    ``moe.<field>`` targets the nested MoESpec."""
+    import dataclasses
+
+    def parse(v):
+        for cast in (int, float):
+            try:
+                return cast(v)
+            except ValueError:
+                pass
+        if v in ("true", "True", "false", "False"):
+            return v.lower() == "true"
+        return v
+
+    kw, moe_kw = {}, {}
+    for s in sets or []:
+        k, v = s.split("=", 1)
+        if k.startswith("moe."):
+            moe_kw[k[4:]] = parse(v)
+        else:
+            kw[k] = parse(v)
+    if moe_kw:
+        kw["moe"] = dataclasses.replace(cfg.moe, **moe_kw)
+    return cfg.with_(**kw) if kw else cfg
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             micro=None, profile_kind=None, sets=None, tag: str = "") -> dict:
+    import jax
+
+    from repro.configs import SHAPES, get_config, shape_applicable
+    from repro.distributed.sharding import make_profile
+    from repro.launch import gate_cell
+    from repro.launch.cells import build_cell, lower_cell
+    from repro.launch.hlo_analysis import analyze_compiled
+    from repro.launch.mesh import make_production_mesh
+    from repro.models.model import model_flops_per_step
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "n_devices": mesh.size,
+        "ok": False,
+    }
+    t0 = time.time()
+    try:
+        if arch == "gate-anns":
+            cell = gate_cell.build_gate_cell(shape_name, mesh, sets=sets)
+            rec["model_flops"] = gate_cell.gate_model_flops(
+                shape_name, mesh.size
+            )
+        else:
+            cfg = _apply_overrides(get_config(arch), sets)
+            shape = SHAPES[shape_name]
+            ok, why = shape_applicable(cfg, shape)
+            if not ok:
+                rec["skipped"] = why
+                rec["ok"] = True
+                return rec
+            profile = make_profile(profile_kind) if profile_kind else None
+            cell = build_cell(
+                cfg, shape, mesh, num_microbatches=micro, profile=profile
+            )
+            rec["model_flops"] = model_flops_per_step(cfg, shape)
+        with mesh:
+            lowered = lower_cell(cell)
+            rec["lower_s"] = round(time.time() - t0, 2)
+            t1 = time.time()
+            compiled = lowered.compile()
+            rec["compile_s"] = round(time.time() - t1, 2)
+        mem = compiled.memory_analysis()
+        print(mem)
+        for f in (
+            "argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes",
+        ):
+            rec[f] = int(getattr(mem, f, -1))
+        ca = compiled.cost_analysis() or {}
+        print({k: ca[k] for k in ("flops", "bytes accessed") if k in ca})
+        t2 = time.time()
+        rec["hlo"] = analyze_compiled(compiled)
+        rec["analyze_s"] = round(time.time() - t2, 2)
+        # sidecar: compiled HLO text for offline re-analysis (perf loop
+        # re-parses without recompiling)
+        import gzip
+
+        mesh_tag = ("2x16x16" if multi_pod else "16x16") + tag
+        side = os.path.join(
+            out_dir, f"{arch}__{shape_name}__{mesh_tag}.hlo.txt.gz"
+        )
+        with gzip.open(side, "wt") as f:
+            f.write(compiled.as_text())
+        rec["fallbacks"] = cell.fallbacks + cell.ctx.fallbacks
+        rec["ok"] = True
+    except Exception as e:  # noqa: BLE001 — record and continue the sweep
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc(limit=20)
+    finally:
+        rec["total_s"] = round(time.time() - t0, 2)
+    return rec
+
+
+def all_cells():
+    from repro.configs import ARCH_NAMES, LM_SHAPES
+    from repro.launch import gate_cell
+
+    for arch in ARCH_NAMES:
+        for shape in LM_SHAPES:
+            yield arch, shape.name
+    for shape_name in gate_cell.GATE_SHAPES:
+        yield "gate-anns", shape_name
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--micro", type=int, default=None)
+    ap.add_argument("--profile", default=None)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--set", action="append", default=[],
+                    help="config override key=value (moe.impl=dropping, "
+                         "attn_chunk=512, ...); repeatable")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+
+    if args.all:
+        # one subprocess per cell: isolates compile memory + failures
+        failures = 0
+        for arch, shape in all_cells():
+            for mp in ([False, True] if args.both_meshes else [args.multi_pod]):
+                mesh_name = "2x16x16" if mp else "16x16"
+                path = os.path.join(
+                    args.out, f"{arch}__{shape}__{mesh_name}{args.tag}.json"
+                )
+                if os.path.exists(path):
+                    continue
+                cmd = [
+                    sys.executable, "-m", "repro.launch.dryrun",
+                    "--arch", arch, "--shape", shape, "--out", args.out,
+                ]
+                if mp:
+                    cmd.append("--multi-pod")
+                if args.tag:
+                    cmd += ["--tag", args.tag]
+                print(f"=== {arch} {shape} {mesh_name}", flush=True)
+                r = subprocess.run(cmd, capture_output=True, text=True)
+                if r.returncode != 0:
+                    failures += 1
+                    print(r.stdout[-2000:], r.stderr[-2000:], flush=True)
+        sys.exit(1 if failures else 0)
+
+    rec = run_cell(
+        args.arch, args.shape, args.multi_pod, args.out,
+        micro=args.micro, profile_kind=args.profile,
+        sets=getattr(args, "set"), tag=args.tag,
+    )
+    mesh_name = rec["mesh"]
+    path = os.path.join(
+        args.out, f"{args.arch}__{args.shape}__{mesh_name}{args.tag}.json"
+    )
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    status = "OK" if rec.get("ok") else "FAIL"
+    if rec.get("skipped"):
+        status = "SKIP"
+    print(
+        f"[{status}] {args.arch} {args.shape} {mesh_name} "
+        f"({rec.get('total_s')}s) -> {path}"
+    )
+    if not rec.get("ok"):
+        print(rec.get("error"))
+        print(rec.get("traceback", "")[-3000:])
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Inline the §Roofline table into EXPERIMENTS.md from the dry-run JSONs.
+
+    python -m repro.launch.fill_experiments
+"""
+from __future__ import annotations
+
+import json
+import re
+
+from repro.launch.roofline import load_cells, render_markdown, roofline_row
+
+MARK = "<!-- ROOFLINE_TABLE -->"
+
+
+def main():
+    rows = [roofline_row(r) for r in load_cells("experiments/dryrun", "16x16")]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    md = render_markdown(rows)
+    n_fit = sum(r["fits_hbm"] for r in rows)
+    summary = (
+        f"\n{len(rows)} baseline cells on the 16×16 mesh; {n_fit}/{len(rows)} "
+        "fit 16 GiB HBM (⚠ marks the rest — per-cell notes in the table; "
+        "the multi-pod 2×16×16 compile pass for all cells is recorded in "
+        "`experiments/dryrun/*2x16x16.json`).\n\n"
+    )
+    with open("EXPERIMENTS.md") as f:
+        text = f.read()
+    block = MARK + "\n" + summary + md
+    if MARK in text:
+        # replace from marker to the next '---' horizontal rule
+        pat = re.compile(re.escape(MARK) + r".*?(?=\n---)", re.S)
+        text = pat.sub(block, text, count=1)
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(text)
+    with open("experiments/dryrun/roofline_16x16.json", "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"inlined {len(rows)} rows into EXPERIMENTS.md")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Production mesh factory.
+
+A FUNCTION (not module-level constant) so importing never touches jax device
+state.  Single pod: (16, 16) = ("data", "model") — 256 chips (one v5e pod).
+Multi-pod: (2, 16, 16) = ("pod", "data", "model") — 512 chips; the "pod" axis
+carries only data parallelism (gradient all-reduce over DCN), the in-pod axes
+carry FSDP + tensor parallelism over ICI.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh(shape=(2, 2), axes=("data", "model")) -> jax.sharding.Mesh:
+    """Small mesh over however many host devices exist (tests/examples)."""
+    n = 1
+    for s in shape:
+        n *= s
+    avail = len(jax.devices())
+    if avail < n:
+        raise RuntimeError(
+            f"need {n} devices, have {avail}; set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=N before jax init"
+        )
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )

@@ -1,0 +1,284 @@
+"""Shared model machinery: parameter tables, norms, RoPE, blockwise attention.
+
+Parameters are a flat ``dict[str, jax.Array]``.  Each model family builds a
+``param_table`` — ``dict[name, ParamSpec]`` — from which init, eval_shape and
+sharding all derive (single source of truth).  Layer-stacked params carry a
+leading "layers" logical axis and are consumed either by ``lax.scan`` (scanned
+stacks) or python-loop indexing (heterogeneous stacks, e.g. zamba2).
+
+Attention is blockwise (flash-style online softmax over KV chunks, pure jnp —
+Pallas is reserved for the ANNS hot loop where the paper's contribution lives;
+on a 512-fake-device CPU dry-run Mosaic kernels cannot lower anyway).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import NULL_CTX, ShardingCtx
+
+Params = Dict[str, jax.Array]
+NEG_INF = -1e30
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]  # logical axis names (len == rank)
+    init: str = "normal"  # normal | zeros | ones
+    scale: Optional[float] = None  # stddev override; default 1/sqrt(fan_in)
+    dtype: Optional[str] = None
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def init_param(key: jax.Array, spec: ParamSpec, dtype: str) -> jax.Array:
+    dt = jnp.dtype(spec.dtype or dtype)
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dt)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dt)
+    fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+    std = spec.scale if spec.scale is not None else 1.0 / np.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(dt)
+
+
+def init_params(table: Dict[str, ParamSpec], key: jax.Array, dtype: str) -> Params:
+    names = sorted(table)
+    keys = jax.random.split(key, len(names))
+    return {n: init_param(k, table[n], dtype) for n, k in zip(names, keys)}
+
+
+def param_shape_structs(table: Dict[str, ParamSpec], dtype: str):
+    return {
+        n: jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype or dtype))
+        for n, s in table.items()
+    }
+
+
+def count_params(table: Dict[str, ParamSpec]) -> int:
+    return sum(int(np.prod(s.shape)) for s in table.values())
+
+
+# ---------------------------------------------------------------------------
+# Primitive layers
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, D); positions: (B, S) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, D/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def glu_mlp(x, w_gate, w_up, w_down, act: str, ctx: ShardingCtx):
+    h_g = jnp.einsum("bsd,df->bsf", x, w_gate.astype(x.dtype))
+    h_u = jnp.einsum("bsd,df->bsf", x, w_up.astype(x.dtype))
+    if act == "swiglu":
+        h = jax.nn.silu(h_g) * h_u
+    elif act == "geglu":
+        h = jax.nn.gelu(h_g, approximate=True) * h_u
+    else:
+        raise ValueError(act)
+    h = ctx.constrain(h, ("act_batch", None, "act_ff"))
+    return jnp.einsum("bsf,fd->bsd", h, w_down.astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Blockwise attention (online softmax over KV chunks)
+# ---------------------------------------------------------------------------
+
+def blockwise_attention(
+    q: jax.Array,  # (B, Sq, Hq, D)
+    k: jax.Array,  # (B, Sk, Hkv, D)
+    v: jax.Array,  # (B, Sk, Hkv, D)
+    pos_q: jax.Array,  # (B, Sq) int32
+    pos_k: jax.Array,  # (B, Sk) int32; -1 marks an empty cache slot
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    chunk: int = 1024,
+    q_chunk: Optional[int] = 512,
+) -> jax.Array:
+    """GQA/MQA blockwise attention; returns (B, Sq, Hq, D) in q.dtype.
+
+    2-D blocked (flash-style): an outer ``lax.scan`` over QUERY chunks wraps
+    an inner scan over KV chunks, so the live score block is
+    O(q_chunk · kv_chunk · H · B) — the memory term that dominated the
+    dry-run before q-chunking (score block at Sq=4096, c=1024 was ~8.6 GiB
+    per device on llama3-8b train_4k; 512-chunking cuts it 8x).  Trip counts
+    are recovered by the roofline HLO parser (cost_analysis counts loop
+    bodies once).
+    """
+    if q_chunk is not None and q.shape[1] > q_chunk:
+        B, Sq = q.shape[:2]
+        qc = int(q_chunk)
+        pad = (-Sq) % qc
+        if pad:
+            q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            pos_q = jnp.pad(pos_q, ((0, 0), (0, pad)), constant_values=-1)
+        nq = q.shape[1] // qc
+        q_ch = q.reshape(B, nq, qc, *q.shape[2:]).swapaxes(0, 1)
+        pq_ch = pos_q.reshape(B, nq, qc).swapaxes(0, 1)
+
+        def body(_, inp):
+            q_i, pq_i = inp
+            out_i = blockwise_attention(
+                q_i, k, v, pq_i, pos_k,
+                causal=causal, window=window, chunk=chunk, q_chunk=None,
+            )
+            return None, out_i
+
+        _, outs = jax.lax.scan(body, None, (q_ch, pq_ch))
+        out = outs.swapaxes(0, 1).reshape(B, Sq + pad, *q.shape[2:])
+        return out[:, :Sq]
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = 1.0 / np.sqrt(D)
+    chunk = int(min(chunk, Sk))
+    if Sk % chunk:  # ragged tail: pad with pos_k = -1 (masked everywhere)
+        pad = chunk - Sk % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        pos_k = jnp.pad(pos_k, ((0, 0), (0, pad)), constant_values=-1)
+        Sk += pad
+    n_chunks = Sk // chunk
+
+    qf = (q.astype(jnp.float32) * scale).reshape(B, Sq, Hkv, G, D)
+
+    def body(carry, inputs):
+        acc, m, l = carry  # acc: (B,Hkv,G,Sq,D), m/l: (B,Hkv,G,Sq)
+        k_c, v_c, pk_c = inputs  # (B,c,Hkv,D), (B,c,Hkv,D), (B,c)
+        s = jnp.einsum(
+            "bqhgd,bkhd->bhgqk", qf, k_c.astype(jnp.float32)
+        )  # (B,Hkv,G,Sq,c)
+        mask = (pk_c[:, None, :] >= 0)  # valid slot
+        if causal:
+            mask &= pk_c[:, None, :] <= pos_q[:, :, None]
+        if window is not None:
+            mask &= (pos_q[:, :, None] - pk_c[:, None, :]) < window
+        s = jnp.where(mask[:, None, None, :, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p, v_c.astype(jnp.float32)
+        )
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((B, Hkv, G, Sq, D), jnp.float32)
+    m0 = jnp.full((B, Hkv, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Sq), jnp.float32)
+
+    ks = k.reshape(B, n_chunks, chunk, Hkv, D).swapaxes(0, 1)
+    vs = v.reshape(B, n_chunks, chunk, Hkv, D).swapaxes(0, 1)
+    ps = pos_k.reshape(B, n_chunks, chunk).swapaxes(0, 1)
+
+    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), (ks, vs, ps))
+
+    out = acc / jnp.maximum(l[..., None], 1e-20)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, Hq, D)
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,      # (B, 1, Hq, D)
+    k: jax.Array,      # (B, S, Hkv, D)
+    v: jax.Array,      # (B, S, Hkv, D)
+    pos_q: jax.Array,  # (B, 1)
+    pos_k: jax.Array,  # (B, S); -1 marks empty slots
+    *,
+    window: Optional[int] = None,
+) -> jax.Array:
+    """Single-token attention WITHOUT the chunk scan (§Perf decode lever).
+
+    The kv-chunk ``lax.scan`` is right for prefill but wrong for decode on a
+    sequence-sharded cache: sequential chunk iteration forces GSPMD to
+    all-gather the cache to every device (measured 68.7 GB/step on llama3-8b
+    decode_32k).  The single-shot form reduces over the S axis, which GSPMD
+    lowers to LOCAL partial softmax sums + one tiny all-reduce of the
+    (B, H, D) partials — flash-decoding's combine, derived by the partitioner.
+    Score memory is (B, Hq, S) — trivial at Sq = 1.
+    """
+    B, _, Hq, D = q.shape
+    _, S, Hkv, _ = k.shape
+    G = Hq // Hkv
+    # cache stays in its storage dtype: fp32 ACCUMULATION on the dot only
+    # (an astype(f32) read would drag a full fp32 cache copy through the
+    # decode carry — measured as the dominant memory mover)
+    qh = (q * (1.0 / np.sqrt(D)).astype(q.dtype)).reshape(B, Hkv, G, D)
+    s = jnp.einsum(
+        "bhgd,bkhd->bhgk", qh.astype(k.dtype), k,
+        preferred_element_type=jnp.float32,
+    )
+    mask = (pos_k >= 0) & (pos_k <= pos_q)  # (B, S)
+    if window is not None:
+        mask &= (pos_q - pos_k) < window
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum(
+        "bhgk,bkhd->bhgd", p.astype(v.dtype), v,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(B, 1, Hq, D).astype(q.dtype)
+
+
+def cache_update(
+    cache_k: jax.Array,  # (B, S, Hkv, D)
+    cache_v: jax.Array,
+    cache_pos: jax.Array,  # (B, S) int32 positions per slot (-1 empty)
+    k_new: jax.Array,  # (B, 1, Hkv, D)
+    v_new: jax.Array,
+    t: jax.Array,  # (B,) int32 current decode position
+):
+    """Ring-buffer single-token cache update (uniform across archs)."""
+    S = cache_k.shape[1]
+    slot = (t % S).astype(jnp.int32)  # (B,)
+    b_idx = jnp.arange(cache_k.shape[0])
+    cache_k = cache_k.at[b_idx, slot].set(k_new[:, 0].astype(cache_k.dtype))
+    cache_v = cache_v.at[b_idx, slot].set(v_new[:, 0].astype(cache_v.dtype))
+    cache_pos = cache_pos.at[b_idx, slot].set(t.astype(jnp.int32))
+    return cache_k, cache_v, cache_pos
+
+
+def cross_entropy(
+    logits: jax.Array, labels: jax.Array, mask: Optional[jax.Array] = None
+) -> jax.Array:
+    """Mean next-token CE in fp32; logits (B,S,V), labels (B,S)."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

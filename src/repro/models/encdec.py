@@ -1,0 +1,253 @@
+"""Encoder-decoder transformer (seamless-m4t backbone).
+
+The speech frontend is a STUB per assignment: inputs are precomputed frame
+embeddings ``frames: (B, S, d_model)``.  Encoder is bidirectional; decoder is
+causal with per-layer cross-attention.  Serving: ``prefill`` encodes frames and
+precomputes cross-attention KV (the standard enc-dec serving split); ``decode``
+steps the decoder with a ring-buffer self-attn cache + static cross KV.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import NULL_CTX, ShardingCtx
+from repro.models.common import (
+    ParamSpec,
+    Params,
+    apply_rope,
+    blockwise_attention,
+    cache_update,
+    cross_entropy,
+    decode_attention,
+    glu_mlp,
+    init_params,
+    param_shape_structs,
+    rms_norm,
+)
+
+
+class EncDecLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    def param_table(self) -> Dict[str, ParamSpec]:
+        cfg = self.cfg
+        d, H, hd, ff, V = (
+            cfg.d_model, cfg.num_heads, cfg.head_dim, cfg.d_ff, cfg.vocab_size,
+        )
+        Hkv = cfg.num_kv_heads
+        t: Dict[str, ParamSpec] = {
+            "tok_embed": ParamSpec((V, d), ("vocab", "embed"), scale=0.02),
+            "enc_final_norm": ParamSpec((d,), ("norm",), init="zeros"),
+            "final_norm": ParamSpec((d,), ("norm",), init="zeros"),
+            "lm_head": ParamSpec((d, V), ("embed", "vocab")),
+        }
+
+        def attn_block(prefix, lead, lax_):
+            return {
+                f"{prefix}attn_norm": ParamSpec(lead + (d,), lax_ + ("norm",), init="zeros"),
+                f"{prefix}wq": ParamSpec(lead + (d, H, hd), lax_ + ("embed", "heads", "head_dim")),
+                f"{prefix}wk": ParamSpec(lead + (d, Hkv, hd), lax_ + ("embed", "kv_heads", "head_dim")),
+                f"{prefix}wv": ParamSpec(lead + (d, Hkv, hd), lax_ + ("embed", "kv_heads", "head_dim")),
+                f"{prefix}wo": ParamSpec(lead + (H, hd, d), lax_ + ("heads", "head_dim", "embed")),
+            }
+
+        def mlp_block(prefix, lead, lax_):
+            return {
+                f"{prefix}mlp_norm": ParamSpec(lead + (d,), lax_ + ("norm",), init="zeros"),
+                f"{prefix}w_gate": ParamSpec(lead + (d, ff), lax_ + ("embed", "ff")),
+                f"{prefix}w_up": ParamSpec(lead + (d, ff), lax_ + ("embed", "ff")),
+                f"{prefix}w_down": ParamSpec(lead + (ff, d), lax_ + ("ff", "embed")),
+            }
+
+        le, ld = (cfg.encoder_layers,), (cfg.num_layers,)
+        lax_ = ("layers",)
+        t.update(attn_block("enc/", le, lax_))
+        t.update(mlp_block("enc/", le, lax_))
+        t.update(attn_block("dec/", ld, lax_))
+        t.update(attn_block("dec/x", ld, lax_))  # cross-attention
+        t.update(mlp_block("dec/", ld, lax_))
+        return t
+
+    def init(self, key):
+        return init_params(self.param_table(), key, self.cfg.param_dtype)
+
+    def param_specs(self):
+        return param_shape_structs(self.param_table(), self.cfg.param_dtype)
+
+    # ------------------------------------------------------------------ layers
+    def _attn(self, p, prefix, xq, pos_q, pos_k, causal, ctx,
+              kv_src=None, rope=True):
+        """Pre-LN attention. kv_src=None → self-attention on normed xq."""
+        cfg = self.cfg
+        dt = xq.dtype
+        h = rms_norm(xq, p[f"{prefix}attn_norm"], cfg.norm_eps)
+        src = h if kv_src is None else kv_src
+        q = jnp.einsum("bsd,dhk->bshk", h, p[f"{prefix}wq"].astype(dt))
+        k = jnp.einsum("bsd,dhk->bshk", src, p[f"{prefix}wk"].astype(dt))
+        v = jnp.einsum("bsd,dhk->bshk", src, p[f"{prefix}wv"].astype(dt))
+        if rope:
+            q = apply_rope(q, pos_q, cfg.rope_theta)
+            k = apply_rope(k, pos_k, cfg.rope_theta)
+        q = ctx.constrain(q, ("act_batch", None, "act_heads", None))
+        out = blockwise_attention(
+            q, k, v, pos_q, pos_k, causal=causal, chunk=cfg.attn_chunk
+        )
+        return jnp.einsum("bshk,hkd->bsd", out, p[f"{prefix}wo"].astype(dt)), (k, v)
+
+    def _mlp(self, p, prefix, x, ctx):
+        cfg = self.cfg
+        h = rms_norm(x, p[f"{prefix}mlp_norm"], cfg.norm_eps)
+        return glu_mlp(
+            h, p[f"{prefix}w_gate"], p[f"{prefix}w_up"], p[f"{prefix}w_down"],
+            cfg.mlp_act, ctx,
+        )
+
+    def _encode(self, params, frames, ctx):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.compute_dtype)
+        x = frames.astype(dt)
+        x = ctx.constrain(x, ("act_batch", "act_seq", "act_embed"))
+        B, S, _ = x.shape
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        names = [k[4:] for k in self.param_table() if k.startswith("enc/")]
+        stacked = {n: params[f"enc/{n}"] for n in names}
+
+        def body(x, p_l):
+            a, _ = self._attn(p_l, "", x, pos, pos, causal=False, ctx=ctx)
+            x = x + a
+            x = x + self._mlp(p_l, "", x, ctx)
+            x = ctx.constrain(x, ("act_batch", "act_seq", "act_embed"))
+            return x, None
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        x, _ = jax.lax.scan(body_fn, x, stacked)
+        return rms_norm(x, params["enc_final_norm"], cfg.norm_eps), pos
+
+    def _dec_names(self):
+        return [k[4:] for k in self.param_table() if k.startswith("dec/")]
+
+    def _decoder_full(self, params, tokens, enc_out, enc_pos, ctx,
+                      collect_caches: bool):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.compute_dtype)
+        x = params["tok_embed"].astype(dt)[tokens]
+        x = ctx.constrain(x, ("act_batch", "act_seq", "act_embed"))
+        B, S, _ = x.shape
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        names = self._dec_names()
+        stacked = {n: params[f"dec/{n}"] for n in names}
+
+        def body(x, p_l):
+            a, kv_self = self._attn(p_l, "", x, pos, pos, causal=True, ctx=ctx)
+            x = x + a
+            a, kv_cross = self._attn(p_l, "x", x, pos, enc_pos, causal=False,
+                                     ctx=ctx, kv_src=enc_out, rope=False)
+            x = x + a
+            x = x + self._mlp(p_l, "", x, ctx)
+            x = ctx.constrain(x, ("act_batch", "act_seq", "act_embed"))
+            return x, (kv_self, kv_cross) if collect_caches else None
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        x, caches = jax.lax.scan(body_fn, x, stacked)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return x, pos, caches
+
+    # ------------------------------------------------------------------- API
+    def loss(self, params, batch, ctx: ShardingCtx = NULL_CTX):
+        enc_out, enc_pos = self._encode(params, batch["frames"], ctx)
+        x, _, _ = self._decoder_full(
+            params, batch["tokens"], enc_out, enc_pos, ctx, collect_caches=False
+        )
+        logits = jnp.einsum(
+            "bsd,dv->bsv", x, params["lm_head"].astype(x.dtype)
+        )
+        logits = ctx.constrain(logits, ("act_batch", "act_seq", "act_vocab"))
+        labels = batch["labels"]
+        mask = (labels[:, 1:] >= 0).astype(jnp.float32)
+        ce = cross_entropy(logits[:, :-1], jnp.maximum(labels[:, 1:], 0), mask)
+        return ce, {"ce": ce, "aux": jnp.zeros((), jnp.float32)}
+
+    def prefill(self, params, batch, ctx: ShardingCtx = NULL_CTX,
+                capacity: Optional[int] = None):
+        """Encode frames + run decoder over the prompt tokens."""
+        enc_out, enc_pos = self._encode(params, batch["frames"], ctx)
+        tokens = batch["tokens"]
+        x, pos, caches = self._decoder_full(
+            params, tokens, enc_out, enc_pos, ctx, collect_caches=True
+        )
+        (ks, vs), (xks, xvs) = caches
+        logits = jnp.einsum(
+            "bsd,dv->bsv", x[:, -1:], params["lm_head"].astype(x.dtype)
+        )[:, 0]
+        S = tokens.shape[1]
+        C = max(capacity or S, S)
+        if C > S:  # decode headroom on the self-attn cache
+            padk = ((0, 0), (0, 0), (0, C - S), (0, 0), (0, 0))
+            ks, vs = jnp.pad(ks, padk), jnp.pad(vs, padk)
+            pos = jnp.pad(pos, ((0, 0), (0, C - S)), constant_values=-1)
+        cache = {
+            "k": ks, "v": vs, "pos": pos.astype(jnp.int32),
+            "xk": xks, "xv": xvs, "enc_pos": enc_pos,
+        }
+        return logits, cache
+
+    def cache_specs(self, batch: int, seq_len: int):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.compute_dtype)
+        kv = jax.ShapeDtypeStruct(
+            (cfg.num_layers, batch, seq_len, cfg.num_kv_heads, cfg.head_dim), dt
+        )
+        return {
+            "k": kv,
+            "v": kv,
+            "pos": jax.ShapeDtypeStruct((batch, seq_len), jnp.int32),
+            "xk": kv,
+            "xv": kv,
+            "enc_pos": jax.ShapeDtypeStruct((batch, seq_len), jnp.int32),
+        }
+
+    def decode(self, params, tokens, cache, t, ctx: ShardingCtx = NULL_CTX):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.compute_dtype)
+        x = params["tok_embed"].astype(dt)[tokens]
+        names = self._dec_names()
+        stacked = {n: params[f"dec/{n}"] for n in names}
+        cache_pos = cache["pos"]
+        enc_pos = cache["enc_pos"]
+        pos_q = t[:, None]
+
+        def body(carry, xs):
+            x, cp = carry
+            p_l, ck, cv, xk, xv = xs
+            h = rms_norm(x, p_l["attn_norm"], cfg.norm_eps)
+            q = jnp.einsum("bsd,dhk->bshk", h, p_l["wq"].astype(dt))
+            k = jnp.einsum("bsd,dhk->bshk", h, p_l["wk"].astype(dt))
+            v = jnp.einsum("bsd,dhk->bshk", h, p_l["wv"].astype(dt))
+            q = apply_rope(q, pos_q, cfg.rope_theta)
+            k = apply_rope(k, pos_q, cfg.rope_theta)
+            ck, cv, cp = cache_update(ck, cv, cp, k, v, t)
+            a = decode_attention(q, ck, cv, pos_q, cp)
+            x = x + jnp.einsum("bshk,hkd->bsd", a, p_l["wo"].astype(dt))
+            # cross attention against the static encoder cache (non-causal:
+            # pass pos_q = +inf so every encoder slot stays unmasked)
+            h = rms_norm(x, p_l["xattn_norm"], cfg.norm_eps)
+            qx = jnp.einsum("bsd,dhk->bshk", h, p_l["xwq"].astype(dt))
+            big = jnp.full_like(pos_q, jnp.iinfo(jnp.int32).max)
+            a = decode_attention(qx, xk, xv, big, enc_pos)
+            x = x + jnp.einsum("bshk,hkd->bsd", a, p_l["xwo"].astype(dt))
+            x = x + self._mlp(p_l, "", x, ctx)
+            return (x, cp), (ck, cv)
+
+        (x, cache_pos), (ks, vs) = jax.lax.scan(
+            body, (x, cache_pos), (stacked, cache["k"], cache["v"],
+                                   cache["xk"], cache["xv"])
+        )
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(dt))[:, 0]
+        new_cache = dict(cache, k=ks, v=vs, pos=cache_pos)
+        return logits, new_cache

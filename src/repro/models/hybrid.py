@@ -1,0 +1,249 @@
+"""zamba2-style hybrid LM: Mamba2 backbone + one SHARED transformer block
+applied every ``attn_every`` Mamba blocks (weight reuse across applications,
+each application with its own KV cache at serve time)."""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import NULL_CTX, ShardingCtx
+from repro.models.common import (
+    ParamSpec,
+    Params,
+    apply_rope,
+    blockwise_attention,
+    cache_update,
+    cross_entropy,
+    decode_attention,
+    glu_mlp,
+    init_params,
+    param_shape_structs,
+    rms_norm,
+)
+from repro.models.ssm import (
+    mamba_block_decode,
+    mamba_block_full,
+    mamba_param_table,
+)
+
+
+class HybridLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.n_shared_apps = cfg.num_layers // cfg.attn_every
+
+    def param_table(self) -> Dict[str, ParamSpec]:
+        cfg = self.cfg
+        d, H, Hkv, hd, ff, V = (
+            cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim,
+            cfg.d_ff, cfg.vocab_size,
+        )
+        L = cfg.num_layers
+        t: Dict[str, ParamSpec] = {
+            "tok_embed": ParamSpec((V, d), ("vocab", "embed"), scale=0.02),
+            "final_norm": ParamSpec((d,), ("norm",), init="zeros"),
+            "lm_head": ParamSpec((d, V), ("embed", "vocab")),
+            # shared transformer block (single copy)
+            "s_attn_norm": ParamSpec((d,), ("norm",), init="zeros"),
+            "s_wq": ParamSpec((d, H, hd), ("embed", "heads", "head_dim")),
+            "s_wk": ParamSpec((d, Hkv, hd), ("embed", "kv_heads", "head_dim")),
+            "s_wv": ParamSpec((d, Hkv, hd), ("embed", "kv_heads", "head_dim")),
+            "s_wo": ParamSpec((H, hd, d), ("heads", "head_dim", "embed")),
+            "s_mlp_norm": ParamSpec((d,), ("norm",), init="zeros"),
+            "s_w_gate": ParamSpec((d, ff), ("embed", "ff")),
+            "s_w_up": ParamSpec((d, ff), ("embed", "ff")),
+            "s_w_down": ParamSpec((ff, d), ("ff", "embed")),
+        }
+        mt = mamba_param_table(cfg, (L,), ("layers",))
+        t.update({f"m/{k}": v for k, v in mt.items()})
+        return t
+
+    def init(self, key):
+        return init_params(self.param_table(), key, self.cfg.param_dtype)
+
+    def param_specs(self):
+        return param_shape_structs(self.param_table(), self.cfg.param_dtype)
+
+    def _mamba_names(self):
+        return [k[2:] for k in self.param_table() if k.startswith("m/")]
+
+    # ------------------------------------------------------------ shared block
+    def _shared_full(self, params, x, pos, ctx):
+        cfg = self.cfg
+        dt = x.dtype
+        h = rms_norm(x, params["s_attn_norm"], cfg.norm_eps)
+        q = apply_rope(
+            jnp.einsum("bsd,dhk->bshk", h, params["s_wq"].astype(dt)),
+            pos, cfg.rope_theta,
+        )
+        k = apply_rope(
+            jnp.einsum("bsd,dhk->bshk", h, params["s_wk"].astype(dt)),
+            pos, cfg.rope_theta,
+        )
+        v = jnp.einsum("bsd,dhk->bshk", h, params["s_wv"].astype(dt))
+        q = ctx.constrain(q, ("act_batch", None, "act_heads", None))
+        a = blockwise_attention(q, k, v, pos, pos, causal=True,
+                                chunk=cfg.attn_chunk)
+        x = x + jnp.einsum("bshk,hkd->bsd", a, params["s_wo"].astype(dt))
+        h2 = rms_norm(x, params["s_mlp_norm"], cfg.norm_eps)
+        x = x + glu_mlp(h2, params["s_w_gate"], params["s_w_up"],
+                        params["s_w_down"], "swiglu", ctx)
+        return ctx.constrain(x, ("act_batch", "act_seq", "act_embed")), (k, v)
+
+    def _shared_decode(self, params, x, ck, cv, cp, t, ctx):
+        cfg = self.cfg
+        dt = x.dtype
+        pos_q = t[:, None]
+        h = rms_norm(x, params["s_attn_norm"], cfg.norm_eps)
+        q = apply_rope(
+            jnp.einsum("bsd,dhk->bshk", h, params["s_wq"].astype(dt)),
+            pos_q, cfg.rope_theta,
+        )
+        k = apply_rope(
+            jnp.einsum("bsd,dhk->bshk", h, params["s_wk"].astype(dt)),
+            pos_q, cfg.rope_theta,
+        )
+        v = jnp.einsum("bsd,dhk->bshk", h, params["s_wv"].astype(dt))
+        ck, cv, cp = cache_update(ck, cv, cp, k, v, t)
+        a = decode_attention(q, ck, cv, pos_q, cp)
+        x = x + jnp.einsum("bshk,hkd->bsd", a, params["s_wo"].astype(dt))
+        h2 = rms_norm(x, params["s_mlp_norm"], cfg.norm_eps)
+        x = x + glu_mlp(h2, params["s_w_gate"], params["s_w_up"],
+                        params["s_w_down"], "swiglu", ctx)
+        return x, ck, cv, cp
+
+    # ------------------------------------------------------------------ modes
+    def _forward_full(self, params, tokens, ctx, want_caches: bool):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.compute_dtype)
+        x = params["tok_embed"].astype(dt)[tokens]
+        x = ctx.constrain(x, ("act_batch", "act_seq", "act_embed"))
+        B, S, _ = x.shape
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        names = self._mamba_names()
+        kvs, ssm_states, conv_states = [], [], []
+        k_conv = cfg.conv_kernel
+
+        def mamba_fn(x, p_l):
+            out, h_fin = mamba_block_full(p_l, x, cfg, ctx)
+            return x + out, h_fin
+
+        def shared_fn(x, pos):
+            return self._shared_full(params, x, pos, ctx)
+
+        if cfg.remat:
+            mamba_fn = jax.checkpoint(mamba_fn)
+            shared_fn = jax.checkpoint(shared_fn)
+        for i in range(cfg.num_layers):
+            p_l = {n: params[f"m/{n}"][i] for n in names}
+            if want_caches:
+                # conv state = trailing k-1 conv INPUTS of this layer
+                tail = x[:, -(k_conv - 1):]
+                h_t = rms_norm(tail, p_l["m_norm"], cfg.norm_eps)
+                xin_t = jnp.einsum(
+                    "bsd,df->bsf", h_t, p_l["wx"].astype(tail.dtype)
+                )
+                conv_states.append(xin_t)
+            x, h_fin = mamba_fn(x, p_l)
+            if want_caches:
+                ssm_states.append(h_fin)
+            if (i + 1) % cfg.attn_every == 0:
+                x, kv = shared_fn(x, pos)
+                if want_caches:
+                    kvs.append(kv)
+        caches = None
+        if want_caches:
+            ks = jnp.stack([k for k, _ in kvs])
+            vs = jnp.stack([v for _, v in kvs])
+            caches = (ks, vs, jnp.stack(ssm_states), jnp.stack(conv_states), pos)
+        return x, pos, caches
+
+    def loss(self, params, batch, ctx: ShardingCtx = NULL_CTX):
+        cfg = self.cfg
+        x, _, _ = self._forward_full(params, batch["tokens"], ctx, False)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))
+        logits = ctx.constrain(logits, ("act_batch", "act_seq", "act_vocab"))
+        labels = batch["labels"]
+        mask = (labels[:, 1:] >= 0).astype(jnp.float32)
+        ce = cross_entropy(logits[:, :-1], jnp.maximum(labels[:, 1:], 0), mask)
+        return ce, {"ce": ce, "aux": jnp.zeros((), jnp.float32)}
+
+    def prefill(self, params, batch, ctx: ShardingCtx = NULL_CTX,
+                capacity: Optional[int] = None):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x, pos, caches = self._forward_full(params, tokens, ctx, True)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum(
+            "bsd,dv->bsv", x[:, -1:], params["lm_head"].astype(x.dtype)
+        )[:, 0]
+        ks, vs, ssm, conv, pos = caches
+        B, S = tokens.shape
+        C = max(capacity or S, S)
+        if C > S:  # decode headroom: empty slots marked pos = -1
+            padk = ((0, 0), (0, 0), (0, C - S), (0, 0), (0, 0))
+            ks, vs = jnp.pad(ks, padk), jnp.pad(vs, padk)
+            pos = jnp.pad(pos, ((0, 0), (0, C - S)), constant_values=-1)
+        cache = {
+            "k": ks, "v": vs, "pos": pos.astype(jnp.int32),
+            "ssm": ssm, "conv": conv.astype(jnp.dtype(cfg.compute_dtype)),
+        }
+        return logits, cache
+
+    def cache_specs(self, batch: int, seq_len: int):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.compute_dtype)
+        dI = cfg.mamba_expand * cfg.d_model
+        nh = dI // cfg.mamba_headdim
+        napp = self.n_shared_apps
+        return {
+            "k": jax.ShapeDtypeStruct(
+                (napp, batch, seq_len, cfg.num_kv_heads, cfg.head_dim), dt
+            ),
+            "v": jax.ShapeDtypeStruct(
+                (napp, batch, seq_len, cfg.num_kv_heads, cfg.head_dim), dt
+            ),
+            "pos": jax.ShapeDtypeStruct((batch, seq_len), jnp.int32),
+            "ssm": jax.ShapeDtypeStruct(
+                (cfg.num_layers, batch, nh, cfg.mamba_headdim, cfg.ssm_state),
+                jnp.float32,
+            ),
+            "conv": jax.ShapeDtypeStruct(
+                (cfg.num_layers, batch, cfg.conv_kernel - 1, dI), dt
+            ),
+        }
+
+    def decode(self, params, tokens, cache, t, ctx: ShardingCtx = NULL_CTX):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.compute_dtype)
+        x = params["tok_embed"].astype(dt)[tokens]
+        names = self._mamba_names()
+        cp = cache["pos"]
+        ks, vs = cache["k"], cache["v"]
+        ssm, conv = cache["ssm"], cache["conv"]
+        new_ssm, new_conv, new_k, new_v = [], [], [], []
+        app = 0
+        for i in range(cfg.num_layers):
+            p_l = {n: params[f"m/{n}"][i] for n in names}
+            out, cs, hs = mamba_block_decode(p_l, x, cfg, conv[i], ssm[i], ctx)
+            x = x + out
+            new_conv.append(cs)
+            new_ssm.append(hs)
+            if (i + 1) % cfg.attn_every == 0:
+                x, ck, cv, cp = self._shared_decode(
+                    params, x, ks[app], vs[app], cp, t, ctx
+                )
+                new_k.append(ck)
+                new_v.append(cv)
+                app += 1
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(dt))[:, 0]
+        new_cache = {
+            "k": jnp.stack(new_k), "v": jnp.stack(new_v), "pos": cp,
+            "ssm": jnp.stack(new_ssm), "conv": jnp.stack(new_conv),
+        }
+        return logits, new_cache

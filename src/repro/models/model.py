@@ -1,0 +1,171 @@
+"""Model factory + per-(arch, shape) input specs for training/serving/dry-run.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins for every model input of a
+cell — weak-type-correct, shardable, no device allocation — the contract the
+multi-pod dry-run lowers against.  ``make_inputs`` materializes small concrete
+batches (smoke tests / examples) with the same structure.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models.common import count_params
+from repro.models.encdec import EncDecLM
+from repro.models.hybrid import HybridLM
+from repro.models.rwkv import RWKVLM
+from repro.models.transformer import DecoderLM
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.family in ("dense", "moe", "vlm"):
+        return DecoderLM(cfg)
+    if cfg.family == "audio":
+        return EncDecLM(cfg)
+    if cfg.family == "hybrid":
+        return HybridLM(cfg)
+    if cfg.family == "ssm":
+        return RWKVLM(cfg)
+    raise ValueError(cfg.family)
+
+
+def _i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Specs for the *batch* argument (tokens/labels/frames/patches)."""
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.compute_dtype)
+    if shape.kind == "train":
+        out: Dict[str, Any] = {}
+        if cfg.family == "vlm":
+            P = cfg.num_patches
+            out["patches"] = jax.ShapeDtypeStruct((B, P, cfg.patch_dim), dt)
+            out["tokens"] = _i32(B, S - P)
+            out["labels"] = _i32(B, S - P)
+        elif cfg.family == "audio":
+            out["frames"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), dt)
+            out["tokens"] = _i32(B, S)
+            out["labels"] = _i32(B, S)
+        else:
+            out["tokens"] = _i32(B, S)
+            out["labels"] = _i32(B, S)
+        return out
+    if shape.kind == "prefill":
+        out = {}
+        if cfg.family == "vlm":
+            P = cfg.num_patches
+            out["patches"] = jax.ShapeDtypeStruct((B, P, cfg.patch_dim), dt)
+            out["tokens"] = _i32(B, S - P)
+        elif cfg.family == "audio":
+            out["frames"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), dt)
+            out["tokens"] = _i32(B, min(S, 128))  # decoder prompt
+        else:
+            out["tokens"] = _i32(B, S)
+        return out
+    if shape.kind == "decode":
+        return {"tokens": _i32(B, 1)}
+    raise ValueError(shape.kind)
+
+
+def serve_state_specs(cfg: ModelConfig, shape: ShapeSpec):
+    """(cache specs, t spec) for decode cells."""
+    model = build_model(cfg)
+    cache = model.cache_specs(shape.global_batch, shape.seq_len)
+    return cache, _i32(shape.global_batch)
+
+
+def make_inputs(cfg: ModelConfig, shape: ShapeSpec, seed: int = 0):
+    """Concrete small inputs matching batch_specs (CPU tests/examples)."""
+    rng = np.random.default_rng(seed)
+    specs = batch_specs(cfg, shape)
+    out = {}
+    for k, s in specs.items():
+        if s.dtype == jnp.int32:
+            out[k] = jnp.asarray(
+                rng.integers(0, cfg.vocab_size, size=s.shape, dtype=np.int32)
+            )
+        else:
+            out[k] = jnp.asarray(
+                rng.standard_normal(s.shape).astype(np.float32), dtype=s.dtype
+            )
+    return out
+
+
+def make_cache(cfg: ModelConfig, batch: int, seq_len: int, filled: int = 0):
+    """Concrete zero-initialized cache with `filled` valid positions."""
+    model = build_model(cfg)
+    specs = model.cache_specs(batch, seq_len)
+    cache = {}
+    for k, s in specs.items():
+        if k == "pos":
+            pos = np.full(s.shape, -1, np.int32)
+            pos[:, :filled] = np.arange(filled)[None, :]
+            cache[k] = jnp.asarray(pos)
+        elif k == "enc_pos":
+            cache[k] = jnp.asarray(
+                np.broadcast_to(np.arange(s.shape[1], dtype=np.int32), s.shape)
+            )
+        else:
+            cache[k] = jnp.zeros(s.shape, s.dtype)
+    return cache
+
+
+def model_flops_per_step(cfg: ModelConfig, shape: ShapeSpec) -> float:
+    """Analytic MODEL_FLOPS: 6·N·D (dense) / 6·N_active·D (MoE) for training,
+    2·N_active per token for inference, + attention term. Used in §Roofline
+    against parsed HLO FLOPs."""
+    n_active = active_param_count(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        toks = B * S
+        flops = 6.0 * n_active * toks
+        # attention scores+values: 12·B·S²·H·hd per layer fwd+bwd (causal ≈ /2)
+        S_eff = min(S, cfg.window) if cfg.window else S
+        n_attn_layers = _attn_layer_count(cfg)
+        flops += 6.0 * 2 * B * S * S_eff * cfg.num_heads * cfg.head_dim \
+            * n_attn_layers * 0.5
+        return flops
+    if shape.kind == "prefill":
+        toks = B * S
+        S_eff = min(S, cfg.window) if cfg.window else S
+        flops = 2.0 * n_active * toks
+        flops += 2.0 * 2 * B * S * S_eff * cfg.num_heads * cfg.head_dim \
+            * _attn_layer_count(cfg) * 0.5
+        return flops
+    # decode: one token; attention reads the whole cache
+    C = min(S, cfg.window) if cfg.window else S
+    if cfg.family == "ssm":
+        C = 0  # constant-size state
+    flops = 2.0 * n_active * B
+    flops += 2.0 * 2 * B * C * cfg.num_heads * cfg.head_dim \
+        * _attn_layer_count(cfg)
+    return flops
+
+
+def _attn_layer_count(cfg: ModelConfig) -> int:
+    if cfg.family == "ssm":
+        return 0
+    if cfg.family == "hybrid":
+        return cfg.num_layers // cfg.attn_every
+    if cfg.family == "audio":
+        return cfg.encoder_layers + 2 * cfg.num_layers  # self+cross
+    return cfg.num_layers
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Params touched per token (MoE counts top-k + shared experts only)."""
+    model = build_model(cfg)
+    table = model.param_table()
+    total = 0
+    for name, spec in table.items():
+        n = int(np.prod(spec.shape))
+        if name in ("we_gate", "we_up", "we_down") and cfg.moe:
+            n = n // cfg.moe.num_experts * cfg.moe.experts_per_token
+        total += n
+    return total

@@ -1,0 +1,356 @@
+"""RWKV-6 ("Finch") — attention-free LM with data-dependent per-channel decay.
+
+WKV6 recurrence per head (state S: hd x hd):
+    y_t = r_t · (S_{t-1} + (u ⊙ k_t) v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T,   w_t = exp(-exp(ww_t)) ∈ (0,1)
+
+Training/prefill uses a chunked parallel form (chunk Q = cfg.rwkv_chunk):
+all decay terms are differences of an inclusive cumsum of log w (<= 0) along
+valid (past→present) directions, so every exp() argument is <= 0 — numerically
+safe without clamping.  The intra-chunk decay tensor is (B,Q,Q,H,hd) per chunk
+inside a sequential ``lax.scan``, keeping memory O(chunk²·d).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import NULL_CTX, ShardingCtx
+from repro.models.common import (
+    ParamSpec,
+    Params,
+    cross_entropy,
+    init_params,
+    param_shape_structs,
+    rms_norm,
+)
+
+TMIX_LORA = 32
+DECAY_LORA = 64
+
+
+def _group_norm_heads(y, scale, bias, eps, H):
+    """y: (B,S,H,hd) — LayerNorm per head (RWKV ln_x)."""
+    B, S, _, hd = y.shape
+    yf = y.astype(jnp.float32)
+    mu = jnp.mean(yf, axis=-1, keepdims=True)
+    var = jnp.var(yf, axis=-1, keepdims=True)
+    yn = (yf - mu) * jax.lax.rsqrt(var + eps)
+    yn = yn.reshape(B, S, H * hd)
+    return (yn * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(
+        y.dtype
+    )
+
+
+def wkv6_chunked(
+    r: jax.Array,   # (B,S,H,hd)
+    k: jax.Array,
+    v: jax.Array,
+    logw: jax.Array,  # (B,S,H,hd) <= 0  (log decay per channel)
+    u: jax.Array,   # (H,hd) bonus
+    chunk: int,
+    S0: jax.Array = None,  # (B,H,hd,hd) initial state
+) -> Tuple[jax.Array, jax.Array]:
+    B, S, H, hd = r.shape
+    Q = int(min(chunk, S))
+    S_orig = S
+    if S % Q:  # ragged tail: logw=0 (w=1), r=k=v=0 → state/output no-op
+        pad = Q - S % Q
+        zpad = ((0, 0), (0, pad), (0, 0), (0, 0))
+        r, k, v = jnp.pad(r, zpad), jnp.pad(k, zpad), jnp.pad(v, zpad)
+        logw = jnp.pad(logw, zpad)
+        S += pad
+    nc = S // Q
+    f32 = jnp.float32
+    rf, kf, vf = r.astype(f32), k.astype(f32), v.astype(f32)
+    lw = logw.astype(f32)
+
+    def to_chunks(a):
+        return a.reshape((B, nc, Q) + a.shape[2:]).swapaxes(0, 1)
+
+    xs = (to_chunks(rf), to_chunks(kf), to_chunks(vf), to_chunks(lw))
+    if S0 is None:
+        S0 = jnp.zeros((B, H, hd, hd), f32)
+
+    idx = jnp.arange(Q)
+    strict = idx[:, None] > idx[None, :]  # i > j (past only)
+
+    def body(Sst, inp):
+        r_c, k_c, v_c, lw_c = inp  # (B,Q,H,hd)
+        c = jnp.cumsum(lw_c, axis=1)  # inclusive cumsum (B,Q,H,hd)
+        # intra-chunk: coeff(i>j) = exp(c_i - lw_i - c_j)  (decay j+1..i-1)
+        expo = (
+            c[:, :, None, :, :] - lw_c[:, :, None, :, :] - c[:, None, :, :, :]
+        )  # (B,Q,Q,H,hd)
+        decay = jnp.where(strict[None, :, :, None, None], jnp.exp(expo), 0.0)
+        A = jnp.einsum("bihd,bijhd,bjhd->bhij", r_c, decay, k_c)
+        diag = jnp.einsum("bihd,hd,bihd->bhi", r_c, u.astype(f32), k_c)
+        A = A + jnp.einsum(
+            "bhi,ij->bhij", diag, jnp.eye(Q, dtype=f32)
+        )
+        y_intra = jnp.einsum("bhij,bjhd->bihd", A, v_c)
+        # inter-chunk: decay from chunk start to i-1 = exp(c_i - lw_i)
+        r_in = r_c * jnp.exp(c - lw_c)
+        y_inter = jnp.einsum("bihd,bhde->bihe", r_in, Sst)
+        # state update: S' = diag(exp(c_Q)) S + Σ_j exp(c_Q - c_j) k_j v_j^T
+        k_out = k_c * jnp.exp(c[:, -1][:, None] - c)  # (B,Q,H,hd)
+        S_new = (
+            jnp.exp(c[:, -1])[..., None] * Sst
+            + jnp.einsum("bjhd,bjhe->bhde", k_out, v_c)
+        )
+        return S_new, y_intra + y_inter
+
+    S_fin, ys = jax.lax.scan(body, S0, xs)
+    y = ys.swapaxes(0, 1).reshape(B, S, H, hd)[:, :S_orig]
+    return y.astype(r.dtype), S_fin
+
+
+def wkv6_step(r, k, v, logw, u, Sst):
+    """Single token. r/k/v/logw: (B,H,hd); Sst: (B,H,hd,hd) fp32."""
+    f32 = jnp.float32
+    rf, kf, vf = r.astype(f32), k.astype(f32), v.astype(f32)
+    bonus = Sst + jnp.einsum("bhd,bhe->bhde", kf * u.astype(f32), vf)
+    y = jnp.einsum("bhd,bhde->bhe", rf, bonus)
+    S_new = jnp.exp(logw.astype(f32))[..., None] * Sst + jnp.einsum(
+        "bhd,bhe->bhde", kf, vf
+    )
+    return y.astype(r.dtype), S_new
+
+
+class RWKVLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    def param_table(self) -> Dict[str, ParamSpec]:
+        cfg = self.cfg
+        d, ff, V, L = cfg.d_model, cfg.d_ff, cfg.vocab_size, cfg.num_layers
+        H, hd = cfg.num_heads, cfg.head_dim
+        assert H * hd == d, "rwkv requires num_heads*head_dim == d_model"
+        lead, lx = (L,), ("layers",)
+        t: Dict[str, ParamSpec] = {
+            "tok_embed": ParamSpec((V, d), ("vocab", "embed"), scale=0.02),
+            "ln0": ParamSpec((d,), ("norm",), init="zeros"),
+            "final_norm": ParamSpec((d,), ("norm",), init="zeros"),
+            "lm_head": ParamSpec((d, V), ("embed", "vocab")),
+            # time-mix
+            "ln1": ParamSpec(lead + (d,), lx + ("norm",), init="zeros"),
+            "mu_x": ParamSpec(lead + (d,), lx + ("norm",), init="zeros"),
+            "mu_5": ParamSpec(lead + (5, d), lx + ("stack", "norm"), init="zeros"),
+            "tmix_w1": ParamSpec(lead + (d, 5 * TMIX_LORA), lx + ("embed", None)),
+            "tmix_w2": ParamSpec(
+                lead + (5, TMIX_LORA, d), lx + ("stack", None, "embed"),
+                scale=0.01,
+            ),
+            "wr": ParamSpec(lead + (d, d), lx + ("embed", "ff")),
+            "wk": ParamSpec(lead + (d, d), lx + ("embed", "ff")),
+            "wv": ParamSpec(lead + (d, d), lx + ("embed", "ff")),
+            "wg": ParamSpec(lead + (d, d), lx + ("embed", "ff")),
+            "wo": ParamSpec(lead + (d, d), lx + ("ff", "embed")),
+            "decay_base": ParamSpec(lead + (d,), lx + ("norm",), init="zeros"),
+            "dec_w1": ParamSpec(lead + (d, DECAY_LORA), lx + ("embed", None)),
+            "dec_w2": ParamSpec(
+                lead + (DECAY_LORA, d), lx + (None, "embed"), scale=0.01
+            ),
+            "u": ParamSpec(lead + (H, hd), lx + ("heads", "head_dim"), init="zeros"),
+            "ln_x_scale": ParamSpec(lead + (d,), lx + ("norm",), init="ones"),
+            "ln_x_bias": ParamSpec(lead + (d,), lx + ("norm",), init="zeros"),
+            # channel-mix
+            "ln2": ParamSpec(lead + (d,), lx + ("norm",), init="zeros"),
+            "cm_mu_k": ParamSpec(lead + (d,), lx + ("norm",), init="zeros"),
+            "cm_mu_r": ParamSpec(lead + (d,), lx + ("norm",), init="zeros"),
+            "cm_wk": ParamSpec(lead + (d, ff), lx + ("embed", "ff")),
+            "cm_wv": ParamSpec(lead + (ff, d), lx + ("ff", "embed")),
+            "cm_wr": ParamSpec(lead + (d, d), lx + ("embed", "ff")),
+        }
+        return t
+
+    def init(self, key):
+        return init_params(self.param_table(), key, self.cfg.param_dtype)
+
+    def param_specs(self):
+        return param_shape_structs(self.param_table(), self.cfg.param_dtype)
+
+    def _layer_names(self):
+        skip = {"tok_embed", "ln0", "final_norm", "lm_head"}
+        return [k for k in self.param_table() if k not in skip]
+
+    # -------------------------------------------------------------- time mix
+    def _tmix_inputs(self, p, x, x_prev):
+        """Data-dependent token-shift lerp (ddlerp). x,x_prev: (B,S,d)."""
+        cfg = self.cfg
+        dt = x.dtype
+        delta = x_prev - x
+        xx = x + delta * p["mu_x"].astype(dt)
+        lora = jnp.tanh(jnp.einsum("bsd,dk->bsk", xx, p["tmix_w1"].astype(dt)))
+        lora = lora.reshape(*lora.shape[:2], 5, TMIX_LORA)
+        mixes = jnp.einsum("bsmk,mkd->bsmd", lora, p["tmix_w2"].astype(dt))
+        mixes = mixes + p["mu_5"].astype(dt)  # (B,S,5,d)
+        feeds = x[:, :, None, :] + delta[:, :, None, :] * mixes
+        xw, xk, xv, xr, xg = [feeds[:, :, i] for i in range(5)]
+        return xw, xk, xv, xr, xg
+
+    def _time_mix_full(self, p, x, ctx, S0=None):
+        cfg = self.cfg
+        H, hd = cfg.num_heads, cfg.head_dim
+        dt = x.dtype
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        h_prev = jnp.pad(h[:, :-1], ((0, 0), (1, 0), (0, 0)))
+        xw, xk, xv, xr, xg = self._tmix_inputs(p, h, h_prev)
+        B, S, d = h.shape
+        r = jnp.einsum("bsd,de->bse", xr, p["wr"].astype(dt)).reshape(B, S, H, hd)
+        k = jnp.einsum("bsd,de->bse", xk, p["wk"].astype(dt)).reshape(B, S, H, hd)
+        v = jnp.einsum("bsd,de->bse", xv, p["wv"].astype(dt)).reshape(B, S, H, hd)
+        g = jnp.einsum("bsd,de->bse", xg, p["wg"].astype(dt))
+        ww = p["decay_base"].astype(jnp.float32) + jnp.einsum(
+            "bsd,dk,ke->bse",
+            xw.astype(jnp.float32),
+            p["dec_w1"].astype(jnp.float32),
+            p["dec_w2"].astype(jnp.float32),
+        )
+        logw = -jnp.exp(ww).reshape(B, S, H, hd)  # log w_t <= 0
+        y, S_fin = wkv6_chunked(r, k, v, logw, p["u"], cfg.rwkv_chunk, S0)
+        y = _group_norm_heads(y, p["ln_x_scale"], p["ln_x_bias"], 1e-5, H)
+        y = y * jax.nn.silu(g)
+        out = jnp.einsum("bsd,de->bse", y, p["wo"].astype(dt))
+        shift_state = h[:, -1]  # (B,d) last normed input for decode continuity
+        return out, S_fin, shift_state
+
+    def _channel_mix_full(self, p, x, ctx):
+        cfg = self.cfg
+        dt = x.dtype
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        h_prev = jnp.pad(h[:, :-1], ((0, 0), (1, 0), (0, 0)))
+        xk = h + (h_prev - h) * p["cm_mu_k"].astype(dt)
+        xr = h + (h_prev - h) * p["cm_mu_r"].astype(dt)
+        kk = jnp.einsum("bsd,df->bsf", xk, p["cm_wk"].astype(dt))
+        kk = jnp.square(jax.nn.relu(kk))
+        kk = ctx.constrain(kk, ("act_batch", None, "act_ff"))
+        vv = jnp.einsum("bsf,fd->bsd", kk, p["cm_wv"].astype(dt))
+        rr = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["cm_wr"].astype(dt)))
+        return rr * vv, h[:, -1]
+
+    # ------------------------------------------------------------------ modes
+    def _forward_full(self, params, tokens, ctx, want_state: bool):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.compute_dtype)
+        x = params["tok_embed"].astype(dt)[tokens]
+        x = rms_norm(x, params["ln0"], cfg.norm_eps)
+        x = ctx.constrain(x, ("act_batch", "act_seq", "act_embed"))
+        names = self._layer_names()
+        stacked = {n: params[n] for n in names}
+
+        def body(x, p_l):
+            tm, S_fin, sh_t = self._time_mix_full(p_l, x, ctx)
+            x = x + tm
+            cm, sh_c = self._channel_mix_full(p_l, x, ctx)
+            x = x + cm
+            x = ctx.constrain(x, ("act_batch", "act_seq", "act_embed"))
+            return x, (S_fin, sh_t, sh_c) if want_state else None
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        if cfg.scan_layers:
+            x, states = jax.lax.scan(body_fn, x, stacked)
+        else:
+            outs = []
+            for i in range(cfg.num_layers):
+                p_l = {n: stacked[n][i] for n in names}
+                x, st = body_fn(x, p_l)
+                outs.append(st)
+            states = (
+                jax.tree.map(lambda *a: jnp.stack(a), *outs)
+                if want_state else None
+            )
+        return x, states
+
+    def loss(self, params, batch, ctx: ShardingCtx = NULL_CTX):
+        cfg = self.cfg
+        x, _ = self._forward_full(params, batch["tokens"], ctx, False)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))
+        logits = ctx.constrain(logits, ("act_batch", "act_seq", "act_vocab"))
+        labels = batch["labels"]
+        mask = (labels[:, 1:] >= 0).astype(jnp.float32)
+        ce = cross_entropy(logits[:, :-1], jnp.maximum(labels[:, 1:], 0), mask)
+        return ce, {"ce": ce, "aux": jnp.zeros((), jnp.float32)}
+
+    def prefill(self, params, batch, ctx: ShardingCtx = NULL_CTX,
+                capacity=None):  # capacity unused: state is O(1) in seq len
+        cfg = self.cfg
+        x, states = self._forward_full(params, batch["tokens"], ctx, True)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum(
+            "bsd,dv->bsv", x[:, -1:], params["lm_head"].astype(x.dtype)
+        )[:, 0]
+        S_fin, sh_t, sh_c = states
+        cache = {"wkv": S_fin, "shift_t": sh_t, "shift_c": sh_c}
+        return logits, cache
+
+    def cache_specs(self, batch: int, seq_len: int):
+        """RWKV 'cache' is constant-size state — the sub-quadratic win."""
+        cfg = self.cfg
+        H, hd, d, L = cfg.num_heads, cfg.head_dim, cfg.d_model, cfg.num_layers
+        dt = jnp.dtype(cfg.compute_dtype)
+        return {
+            "wkv": jax.ShapeDtypeStruct((L, batch, H, hd, hd), jnp.float32),
+            "shift_t": jax.ShapeDtypeStruct((L, batch, d), dt),
+            "shift_c": jax.ShapeDtypeStruct((L, batch, d), dt),
+        }
+
+    def decode(self, params, tokens, cache, t, ctx: ShardingCtx = NULL_CTX):
+        cfg = self.cfg
+        H, hd = cfg.num_heads, cfg.head_dim
+        dt = jnp.dtype(cfg.compute_dtype)
+        x = params["tok_embed"].astype(dt)[tokens]  # (B,1,d)
+        x = rms_norm(x, params["ln0"], cfg.norm_eps)
+        names = self._layer_names()
+        stacked = {n: params[n] for n in names}
+
+        def body(x, xs):
+            p_l, wkv, sh_t, sh_c = xs
+            B = x.shape[0]
+            h = rms_norm(x, p_l["ln1"], cfg.norm_eps)
+            xw, xk, xv, xr, xg = self._tmix_inputs(p_l, h, sh_t[:, None])
+            r = jnp.einsum("bsd,de->bse", xr, p_l["wr"].astype(dt))[:, 0]
+            k = jnp.einsum("bsd,de->bse", xk, p_l["wk"].astype(dt))[:, 0]
+            v = jnp.einsum("bsd,de->bse", xv, p_l["wv"].astype(dt))[:, 0]
+            g = jnp.einsum("bsd,de->bse", xg, p_l["wg"].astype(dt))[:, 0]
+            ww = p_l["decay_base"].astype(jnp.float32) + jnp.einsum(
+                "bsd,dk,ke->bse",
+                xw.astype(jnp.float32),
+                p_l["dec_w1"].astype(jnp.float32),
+                p_l["dec_w2"].astype(jnp.float32),
+            )[:, 0]
+            logw = -jnp.exp(ww).reshape(B, H, hd)
+            y, wkv_new = wkv6_step(
+                r.reshape(B, H, hd), k.reshape(B, H, hd), v.reshape(B, H, hd),
+                logw, p_l["u"], wkv,
+            )
+            y = _group_norm_heads(
+                y[:, None].reshape(B, 1, H, hd),
+                p_l["ln_x_scale"], p_l["ln_x_bias"], 1e-5, H,
+            )
+            y = y * jax.nn.silu(g[:, None])
+            x = x + jnp.einsum("bsd,de->bse", y, p_l["wo"].astype(dt))
+            # channel mix
+            h2 = rms_norm(x, p_l["ln2"], cfg.norm_eps)[:, 0]
+            xk2 = h2 + (sh_c - h2) * p_l["cm_mu_k"].astype(dt)
+            xr2 = h2 + (sh_c - h2) * p_l["cm_mu_r"].astype(dt)
+            kk = jnp.square(jax.nn.relu(
+                jnp.einsum("bd,df->bf", xk2, p_l["cm_wk"].astype(dt))
+            ))
+            vv = jnp.einsum("bf,fd->bd", kk, p_l["cm_wv"].astype(dt))
+            rr = jax.nn.sigmoid(
+                jnp.einsum("bd,de->be", xr2, p_l["cm_wr"].astype(dt))
+            )
+            x = x + (rr * vv)[:, None]
+            return x, (wkv_new, h[:, 0], h2)
+
+        x, (wkv, sh_t, sh_c) = jax.lax.scan(
+            body, x, (stacked, cache["wkv"], cache["shift_t"], cache["shift_c"])
+        )
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(dt))[:, 0]
+        return logits, {"wkv": wkv, "shift_t": sh_t, "shift_c": sh_c}

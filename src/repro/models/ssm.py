@@ -1,0 +1,198 @@
+"""Mamba2 / SSD primitives (zamba2 backbone).
+
+Chunked SSD: sequential ``lax.scan`` over chunks carrying the SSM state; the
+intra-chunk part is the masked (C_i·B_j)·decay(i,j) matmul form from the
+Mamba-2 paper.  All decay exponents are differences of an inclusive cumsum of
+``dt*A <= 0`` along valid directions, so every ``exp`` argument is <= 0 (no
+overflow).  The depthwise causal conv (k=4) is unrolled into shifted adds —
+keeps convolutions out of the HLO so the roofline parser only prices dots.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamSpec
+
+
+def mamba_param_table(cfg: ModelConfig, lead, lax_) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    dI = cfg.mamba_expand * d
+    N = cfg.ssm_state
+    nh = dI // cfg.mamba_headdim
+    k = cfg.conv_kernel
+    return {
+        "m_norm": ParamSpec(lead + (d,), lax_ + ("norm",), init="zeros"),
+        "wz": ParamSpec(lead + (d, dI), lax_ + ("embed", "ff")),
+        "wx": ParamSpec(lead + (d, dI), lax_ + ("embed", "ff")),
+        "wB": ParamSpec(lead + (d, N), lax_ + ("embed", "state")),
+        "wC": ParamSpec(lead + (d, N), lax_ + ("embed", "state")),
+        "wdt": ParamSpec(lead + (d, nh), lax_ + ("embed", "heads")),
+        "dt_bias": ParamSpec(lead + (nh,), lax_ + ("heads",), init="zeros"),
+        "A_log": ParamSpec(lead + (nh,), lax_ + ("heads",), init="zeros"),
+        "D_skip": ParamSpec(lead + (nh,), lax_ + ("heads",), init="ones"),
+        "conv_w": ParamSpec(lead + (k, dI), lax_ + ("conv", "ff"),
+                            scale=0.5),
+        "out_proj": ParamSpec(lead + (dI, d), lax_ + ("ff", "embed")),
+    }
+
+
+def causal_depthwise_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x: (B,S,C), w: (k,C). Unrolled shifted-add causal conv."""
+    k = w.shape[0]
+    out = x * w[k - 1]
+    for i in range(1, k):
+        shifted = jnp.pad(x[:, :-i], ((0, 0), (i, 0), (0, 0)))
+        out = out + shifted * w[k - 1 - i]
+    return out
+
+
+def ssd_chunked(
+    x: jax.Array,   # (B, S, nh, hp)
+    dt: jax.Array,  # (B, S, nh) positive
+    A: jax.Array,   # (nh,) negative
+    Bm: jax.Array,  # (B, S, N)
+    Cm: jax.Array,  # (B, S, N)
+    chunk: int,
+    h0: jax.Array = None,  # (B, nh, hp, N) initial state
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,nh,hp), final state (B,nh,hp,N)). fp32 internal."""
+    B, S, nh, hp = x.shape
+    N = Bm.shape[-1]
+    Q = int(min(chunk, S))
+    S_orig = S
+    if S % Q:  # ragged tail: dt=0 padding is a no-op on state and outputs
+        pad = Q - S % Q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        S += pad
+    nc = S // Q
+
+    xf = x.astype(jnp.float32)
+    da = dt.astype(jnp.float32) * A.astype(jnp.float32)  # (B,S,nh) <= 0
+    Bf = Bm.astype(jnp.float32)
+    Cf = Cm.astype(jnp.float32)
+
+    def to_chunks(a):
+        return a.reshape((B, nc, Q) + a.shape[2:]).swapaxes(0, 1)
+
+    xs = (to_chunks(xf), to_chunks(da), to_chunks(dt.astype(jnp.float32)),
+          to_chunks(Bf), to_chunks(Cf))
+
+    if h0 is None:
+        h0 = jnp.zeros((B, nh, hp, N), jnp.float32)
+
+    idx = jnp.arange(Q)
+    tri = idx[:, None] >= idx[None, :]  # i >= j
+
+    def body(h, inp):
+        x_c, da_c, dt_c, B_c, C_c = inp  # (B,Q,...)
+        cum = jnp.cumsum(da_c, axis=1)  # (B,Q,nh) inclusive
+        scores = jnp.einsum("bin,bjn->bij", C_c, B_c)  # (B,Q,Q)
+        decay = jnp.exp(
+            jnp.where(
+                tri[None, :, :, None],
+                cum[:, :, None, :] - cum[:, None, :, :],
+                -jnp.inf,
+            )
+        )  # (B,Q,Q,nh)
+        dtx = dt_c[..., None] * x_c  # (B,Q,nh,hp)
+        y_intra = jnp.einsum("bij,bijh,bjhp->bihp", scores, decay, dtx)
+        y_inter = jnp.exp(cum)[..., None] * jnp.einsum(
+            "bin,bhpn->bihp", C_c, h
+        )
+        dtot = jnp.exp(cum[:, -1])  # (B,nh)
+        kdecay = jnp.exp(cum[:, -1][:, None, :] - cum) * dt_c  # (B,Q,nh)
+        h_new = dtot[:, :, None, None] * h + jnp.einsum(
+            "bjh,bjn,bjhp->bhpn", kdecay, B_c, x_c
+        )
+        return h_new, y_intra + y_inter
+
+    h_final, ys = jax.lax.scan(body, h0, xs)
+    y = ys.swapaxes(0, 1).reshape(B, S, nh, hp)[:, :S_orig]
+    return y.astype(x.dtype), h_final
+
+
+def ssd_decode_step(
+    x: jax.Array,   # (B, nh, hp)
+    dt: jax.Array,  # (B, nh)
+    A: jax.Array,   # (nh,)
+    Bm: jax.Array,  # (B, N)
+    Cm: jax.Array,  # (B, N)
+    h: jax.Array,   # (B, nh, hp, N) fp32
+) -> Tuple[jax.Array, jax.Array]:
+    da = jnp.exp(dt.astype(jnp.float32) * A.astype(jnp.float32))  # (B,nh)
+    xB = jnp.einsum(
+        "bhp,bn->bhpn", dt.astype(jnp.float32)[..., None] * x.astype(jnp.float32),
+        Bm.astype(jnp.float32),
+    )
+    h_new = da[..., None, None] * h + xB
+    y = jnp.einsum("bhpn,bn->bhp", h_new, Cm.astype(jnp.float32))
+    return y.astype(x.dtype), h_new
+
+
+def mamba_block_full(p, x, cfg: ModelConfig, ctx, h0=None):
+    """Full-sequence Mamba2 block. x: (B,S,d). Returns (out, final_state)."""
+    from repro.models.common import rms_norm  # avoid cycle
+
+    d = cfg.d_model
+    dI = cfg.mamba_expand * d
+    nh = dI // cfg.mamba_headdim
+    dt_ = x.dtype
+    h = rms_norm(x, p["m_norm"], cfg.norm_eps)
+    z = jnp.einsum("bsd,df->bsf", h, p["wz"].astype(dt_))
+    xin = jnp.einsum("bsd,df->bsf", h, p["wx"].astype(dt_))
+    xin = ctx.constrain(xin, ("act_batch", None, "act_ff"))
+    xc = jax.nn.silu(causal_depthwise_conv(xin, p["conv_w"].astype(dt_)))
+    Bm = jnp.einsum("bsd,dn->bsn", h, p["wB"].astype(dt_))
+    Cm = jnp.einsum("bsd,dn->bsn", h, p["wC"].astype(dt_))
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", h, p["wdt"].astype(dt_)).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32)
+    )
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xc.reshape(*xc.shape[:2], nh, cfg.mamba_headdim)
+    y, h_final = ssd_chunked(xh, dt, A, Bm, Cm, cfg.ssm_chunk, h0)
+    y = y + p["D_skip"].astype(dt_)[None, None, :, None] * xh
+    y = y.reshape(*xc.shape)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bsf,fd->bsd", y, p["out_proj"].astype(dt_))
+    return out, h_final
+
+
+def mamba_block_decode(p, x, cfg: ModelConfig, conv_state, ssm_state, ctx):
+    """Single-token Mamba2 step. x: (B,1,d).
+
+    conv_state: (B, k-1, dI) trailing inputs; ssm_state: (B,nh,hp,N) fp32.
+    Returns (out (B,1,d), conv_state', ssm_state').
+    """
+    from repro.models.common import rms_norm
+
+    d = cfg.d_model
+    dI = cfg.mamba_expand * d
+    nh = dI // cfg.mamba_headdim
+    k = cfg.conv_kernel
+    dt_ = x.dtype
+    h = rms_norm(x, p["m_norm"], cfg.norm_eps)[:, 0]  # (B,d)
+    z = jnp.einsum("bd,df->bf", h, p["wz"].astype(dt_))
+    xin = jnp.einsum("bd,df->bf", h, p["wx"].astype(dt_))
+    window = jnp.concatenate([conv_state, xin[:, None, :]], axis=1)  # (B,k,dI)
+    xc = jax.nn.silu(jnp.einsum("bkf,kf->bf", window, p["conv_w"].astype(dt_)))
+    Bm = jnp.einsum("bd,dn->bn", h, p["wB"].astype(dt_))
+    Cm = jnp.einsum("bd,dn->bn", h, p["wC"].astype(dt_))
+    dt = jax.nn.softplus(
+        jnp.einsum("bd,dh->bh", h, p["wdt"].astype(dt_)).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32)
+    )
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xc.reshape(-1, nh, cfg.mamba_headdim)
+    y, ssm_state = ssd_decode_step(xh, dt, A, Bm, Cm, ssm_state)
+    y = y + p["D_skip"].astype(dt_)[None, :, None] * xh
+    y = y.reshape(-1, dI) * jax.nn.silu(z)
+    out = jnp.einsum("bf,fd->bd", y, p["out_proj"].astype(dt_))
+    return out[:, None], window[:, 1:], ssm_state

@@ -1,0 +1,355 @@
+"""Decoder-only transformer LM (dense / MoE / VLM-prefix families).
+
+One homogeneous layer stack consumed by ``lax.scan`` (small HLO, remat-
+friendly); parameters are layer-stacked with a leading "layers" axis.  Serving
+uses a uniform ring-buffer KV cache: ``decode`` writes the new token's KV at
+``slot = t % cache_len`` and attends over every valid slot, which covers full
+attention (cache_len == seq_len) and SWA rolling buffers (cache_len == window)
+with the same code.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import NULL_CTX, ShardingCtx
+from repro.models import moe as moe_lib
+from repro.models.common import (
+    ParamSpec,
+    Params,
+    apply_rope,
+    blockwise_attention,
+    cache_update,
+    cross_entropy,
+    decode_attention,
+    glu_mlp,
+    init_params,
+    param_shape_structs,
+    rms_norm,
+)
+
+
+class DecoderLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------------ params
+    def param_table(self) -> Dict[str, ParamSpec]:
+        cfg = self.cfg
+        L, d, H, Hkv, hd, ff, V = (
+            cfg.num_layers,
+            cfg.d_model,
+            cfg.num_heads,
+            cfg.num_kv_heads,
+            cfg.head_dim,
+            cfg.d_ff,
+            cfg.vocab_size,
+        )
+        t: Dict[str, ParamSpec] = {
+            "tok_embed": ParamSpec((V, d), ("vocab", "embed"), scale=0.02),
+            "final_norm": ParamSpec((d,), ("norm",), init="zeros"),
+        }
+        if not cfg.tie_embeddings:
+            t["lm_head"] = ParamSpec((d, V), ("embed", "vocab"))
+        lead, lax_ = (L,), ("layers",)
+        t.update(
+            {
+                "attn_norm": ParamSpec(lead + (d,), lax_ + ("norm",), init="zeros"),
+                "wq": ParamSpec(
+                    lead + (d, H, hd), lax_ + ("embed", "heads", "head_dim")
+                ),
+                "wk": ParamSpec(
+                    lead + (d, Hkv, hd), lax_ + ("embed", "kv_heads", "head_dim")
+                ),
+                "wv": ParamSpec(
+                    lead + (d, Hkv, hd), lax_ + ("embed", "kv_heads", "head_dim")
+                ),
+                "wo": ParamSpec(
+                    lead + (H, hd, d), lax_ + ("heads", "head_dim", "embed")
+                ),
+                "mlp_norm": ParamSpec(lead + (d,), lax_ + ("norm",), init="zeros"),
+            }
+        )
+        if cfg.qkv_bias:
+            t["bq"] = ParamSpec(lead + (H, hd), lax_ + ("heads", "head_dim"), init="zeros")
+            t["bk"] = ParamSpec(lead + (Hkv, hd), lax_ + ("kv_heads", "head_dim"), init="zeros")
+            t["bv"] = ParamSpec(lead + (Hkv, hd), lax_ + ("kv_heads", "head_dim"), init="zeros")
+        if cfg.moe is not None:
+            t.update(moe_lib.moe_param_table(cfg, "", L))
+        else:
+            t["w_gate"] = ParamSpec(lead + (d, ff), lax_ + ("embed", "ff"))
+            t["w_up"] = ParamSpec(lead + (d, ff), lax_ + ("embed", "ff"))
+            t["w_down"] = ParamSpec(lead + (ff, d), lax_ + ("ff", "embed"))
+        if cfg.family == "vlm":
+            t["patch_proj"] = ParamSpec(
+                (cfg.patch_dim, d), ("patch", "embed")
+            )
+            t["patch_norm"] = ParamSpec((cfg.patch_dim,), ("norm",), init="zeros")
+        return t
+
+    def init(self, key: jax.Array) -> Params:
+        return init_params(self.param_table(), key, self.cfg.param_dtype)
+
+    def param_specs(self):
+        return param_shape_structs(self.param_table(), self.cfg.param_dtype)
+
+    # ----------------------------------------------------------------- pieces
+    def _layer_names(self):
+        cfg = self.cfg
+        names = ["attn_norm", "wq", "wk", "wv", "wo", "mlp_norm"]
+        if cfg.qkv_bias:
+            names += ["bq", "bk", "bv"]
+        if cfg.moe is not None:
+            names += ["router", "we_gate", "we_up", "we_down"]
+            if cfg.moe.shared_experts:
+                names += ["ws_gate", "ws_up", "ws_down", "shared_gate"]
+        else:
+            names += ["w_gate", "w_up", "w_down"]
+        return names
+
+    def _attn_proj_qkv(self, p, h, pos, ctx):
+        cfg = self.cfg
+        dt = h.dtype
+        q = jnp.einsum("bsd,dhk->bshk", h, p["wq"].astype(dt))
+        k = jnp.einsum("bsd,dhk->bshk", h, p["wk"].astype(dt))
+        v = jnp.einsum("bsd,dhk->bshk", h, p["wv"].astype(dt))
+        if cfg.qkv_bias:
+            q = q + p["bq"].astype(dt)
+            k = k + p["bk"].astype(dt)
+            v = v + p["bv"].astype(dt)
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+        q = ctx.constrain(q, ("act_batch", None, "act_heads", None))
+        k = ctx.constrain(k, ("act_batch", None, "cache_heads", None))
+        v = ctx.constrain(v, ("act_batch", None, "cache_heads", None))
+        return q, k, v
+
+    def _mlp(self, p, h, ctx):
+        cfg = self.cfg
+        if cfg.moe is not None:
+            return moe_lib.moe_ffn(h, p, "", cfg, ctx)
+        out = glu_mlp(
+            h, p["w_gate"], p["w_up"], p["w_down"], cfg.mlp_act, ctx
+        )
+        return out, jnp.zeros((), jnp.float32)
+
+    def _layer_full(self, p, x, pos, ctx):
+        """Full-sequence layer (train / prefill). Returns (x, (k, v), aux)."""
+        cfg = self.cfg
+        h = rms_norm(x, p["attn_norm"], cfg.norm_eps)
+        q, k, v = self._attn_proj_qkv(p, h, pos, ctx)
+        attn = blockwise_attention(
+            q, k, v, pos, pos,
+            causal=True, window=cfg.window, chunk=cfg.attn_chunk,
+        )
+        attn_out = jnp.einsum("bshk,hkd->bsd", attn, p["wo"].astype(x.dtype))
+        x = x + attn_out
+        x = ctx.constrain(x, ("act_batch", "act_seq", "act_embed"))
+        h2 = rms_norm(x, p["mlp_norm"], cfg.norm_eps)
+        mlp_out, aux = self._mlp(p, h2, ctx)
+        x = x + mlp_out
+        x = ctx.constrain(x, ("act_batch", "act_seq", "act_embed"))
+        return x, (k, v), aux
+
+    def _layer_decode(self, p, x, cache_k, cache_v, cache_pos, t, ctx):
+        """Single-token layer. x: (B,1,D). Returns (x, new_k, new_v)."""
+        cfg = self.cfg
+        h = rms_norm(x, p["attn_norm"], cfg.norm_eps)
+        pos_q = t[:, None]  # (B,1)
+        q, k, v = self._attn_proj_qkv(p, h, pos_q, ctx)
+        ck, cv, cp = cache_update(cache_k, cache_v, cache_pos, k, v, t)
+        ck = ctx.constrain(ck, ("cache_batch", "cache_seq", "cache_heads", None))
+        cv = ctx.constrain(cv, ("cache_batch", "cache_seq", "cache_heads", None))
+        attn = decode_attention(q, ck, cv, pos_q, cp, window=cfg.window)
+        attn_out = jnp.einsum("bshk,hkd->bsd", attn, p["wo"].astype(x.dtype))
+        x = x + attn_out
+        h2 = rms_norm(x, p["mlp_norm"], cfg.norm_eps)
+        mlp_out, _ = self._mlp(p, h2, ctx)
+        return x + mlp_out, ck, cv, cp
+
+    # ------------------------------------------------------------- embeddings
+    def _embed_tokens(self, params, tokens, ctx):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.compute_dtype)
+        x = params["tok_embed"].astype(dt)[tokens]
+        if cfg.tie_embeddings:  # gemma-style embed scaling
+            x = x * jnp.asarray(np.sqrt(cfg.d_model), dt)
+        return ctx.constrain(x, ("act_batch", "act_seq", "act_embed"))
+
+    def _assemble_input(self, params, batch, ctx):
+        """Token embeds, with optional VLM patch prefix. Returns (x, loss_mask,
+        labels) — labels padded with -1 on non-text positions."""
+        cfg = self.cfg
+        x = self._embed_tokens(params, batch["tokens"], ctx)
+        labels = batch.get("labels")
+        if cfg.family == "vlm" and "patches" in batch:
+            dt = x.dtype
+            pe = rms_norm(
+                batch["patches"].astype(dt), params["patch_norm"], cfg.norm_eps
+            )
+            pe = jnp.einsum("bpc,cd->bpd", pe, params["patch_proj"].astype(dt))
+            x = jnp.concatenate([pe, x], axis=1)
+            if labels is not None:
+                pad = jnp.full(pe.shape[:2], -1, labels.dtype)
+                labels = jnp.concatenate([pad, labels], axis=1)
+        return x, labels
+
+    def _logits(self, params, x, ctx):
+        cfg = self.cfg
+        dt = x.dtype
+        head = (
+            params["tok_embed"].astype(dt).T
+            if cfg.tie_embeddings
+            else params["lm_head"].astype(dt)
+        )
+        logits = jnp.einsum("bsd,dv->bsv", x, head)
+        return ctx.constrain(logits, ("act_batch", "act_seq", "act_vocab"))
+
+    # ------------------------------------------------------------------ modes
+    def _stack_full(self, params, x, pos, ctx, collect_kv: bool):
+        cfg = self.cfg
+        names = self._layer_names()
+        stacked = {n: params[n] for n in names}
+        S = x.shape[1]
+        C = self.cache_len(S)  # SWA: keep only the trailing window — the
+        # full (L, B, S, Hkv, hd) stack at prefill_32k was 120 GiB/device
+
+        def body(carry, p_l):
+            x, aux = carry
+            x2, kv, aux_l = self._layer_full(p_l, x, pos, ctx)
+            y = None
+            if collect_kv:
+                k, v = kv
+                y = (k[:, S - C:], v[:, S - C:]) if C < S else (k, v)
+            return (x2, aux + aux_l), y
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        if cfg.scan_layers:
+            (x, aux), kvs = jax.lax.scan(
+                body_fn, (x, jnp.zeros((), jnp.float32)), stacked
+            )
+        else:
+            aux = jnp.zeros((), jnp.float32)
+            kv_list = []
+            for i in range(cfg.num_layers):
+                p_l = {n: stacked[n][i] for n in names}
+                (x, aux), kv = body_fn((x, aux), p_l)
+                kv_list.append(kv)
+            kvs = (
+                jax.tree.map(lambda *a: jnp.stack(a), *kv_list)
+                if collect_kv
+                else None
+            )
+        return x, kvs, aux
+
+    def loss(self, params, batch, ctx: ShardingCtx = NULL_CTX):
+        cfg = self.cfg
+        x, labels = self._assemble_input(params, batch, ctx)
+        B, S, _ = x.shape
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        x, _, aux = self._stack_full(params, x, pos, ctx, collect_kv=False)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = self._logits(params, x, ctx)
+        # next-token prediction within the window
+        mask = (labels[:, 1:] >= 0).astype(jnp.float32)
+        ce = cross_entropy(
+            logits[:, :-1], jnp.maximum(labels[:, 1:], 0), mask
+        )
+        total = ce + (cfg.moe.router_aux_coef * aux if cfg.moe else 0.0)
+        return total, {"ce": ce, "aux": aux}
+
+    def prefill(self, params, batch, ctx: ShardingCtx = NULL_CTX,
+                capacity: Optional[int] = None):
+        """capacity: total positions the cache must hold (prompt + planned
+        new tokens); defaults to the prompt length."""
+        cfg = self.cfg
+        x, _ = self._assemble_input(params, batch, ctx)
+        B, S, _ = x.shape
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        x, kvs, _ = self._stack_full(params, x, pos, ctx, collect_kv=True)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = self._logits(params, x[:, -1:], ctx)[:, 0]
+        ks, vs = kvs  # (L, B, S, Hkv, hd)
+        cache = self._cache_from_prefill(ks, vs, pos, S, capacity)
+        return logits, cache
+
+    def _cache_from_prefill(self, ks, vs, pos, S, capacity=None):
+        cfg = self.cfg
+        C = self.cache_len(max(capacity or S, S))
+        if C > S:  # headroom for decode: empty slots marked pos = -1
+            padk = ((0, 0), (0, 0), (0, C - S), (0, 0), (0, 0))
+            ks, vs = jnp.pad(ks, padk), jnp.pad(vs, padk)
+            cache_pos = jnp.pad(pos, ((0, 0), (0, C - S)), constant_values=-1)
+            return {"k": ks, "v": vs, "pos": cache_pos.astype(jnp.int32)}
+        if C < S:  # SWA rolling buffer keeps the trailing window
+            # slot for position p is p % C; trailing window is a rotation
+            ks, vs = ks[:, :, -C:], vs[:, :, -C:]
+            pos_tail = pos[:, -C:]
+            shift = (pos_tail[:, 0] % C).astype(jnp.int32)
+            ks = jax.vmap(  # per-batch roll to ring layout
+                lambda kb, s: jnp.roll(kb, s, axis=1), in_axes=(1, 0), out_axes=1
+            )(ks, shift)
+            vs = jax.vmap(
+                lambda vb, s: jnp.roll(vb, s, axis=1), in_axes=(1, 0), out_axes=1
+            )(vs, shift)
+            cache_pos = jax.vmap(lambda pb, s: jnp.roll(pb, s, axis=0))(
+                pos_tail, shift
+            )
+        else:
+            cache_pos = pos
+        return {"k": ks, "v": vs, "pos": cache_pos.astype(jnp.int32)}
+
+    def cache_len(self, seq_len: int) -> int:
+        cfg = self.cfg
+        return min(seq_len, cfg.window) if cfg.window else seq_len
+
+    def cache_specs(self, batch: int, seq_len: int):
+        cfg = self.cfg
+        C = self.cache_len(seq_len)
+        kv = jax.ShapeDtypeStruct(
+            (cfg.num_layers, batch, C, cfg.num_kv_heads, cfg.head_dim),
+            jnp.dtype(cfg.compute_dtype),
+        )
+        return {
+            "k": kv,
+            "v": kv,
+            "pos": jax.ShapeDtypeStruct((batch, C), jnp.int32),
+        }
+
+    def decode(self, params, tokens, cache, t, ctx: ShardingCtx = NULL_CTX):
+        """tokens: (B,1); t: (B,) current position. Returns (logits, cache)."""
+        cfg = self.cfg
+        x = self._embed_tokens(params, tokens, ctx)
+        names = self._layer_names()
+        stacked = {n: params[n] for n in names}
+        cache_pos = cache["pos"]
+
+        def body(carry, xs):
+            x, cp = carry
+            p_l, ck, cv = xs
+            x, ck, cv, cp = self._layer_decode(p_l, x, ck, cv, cp, t, ctx)
+            return (x, cp), (ck, cv)
+
+        if cfg.scan_layers:
+            (x, cache_pos), (ks, vs) = jax.lax.scan(
+                body, (x, cache_pos), (stacked, cache["k"], cache["v"])
+            )
+        else:
+            ks_l, vs_l = [], []
+            for i in range(cfg.num_layers):
+                p_l = {n: stacked[n][i] for n in names}
+                (x, cp_i), (ck, cv) = body(
+                    (x, cache_pos), (p_l, cache["k"][i], cache["v"][i])
+                )
+                ks_l.append(ck)
+                vs_l.append(cv)
+            cache_pos = cp_i
+            ks, vs = jnp.stack(ks_l), jnp.stack(vs_l)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = self._logits(params, x, ctx)[:, 0]
+        return logits, {"k": ks, "v": vs, "pos": cache_pos}

@@ -1,0 +1,4 @@
+from repro.serve.engine import GenerationResult, ServeEngine
+from repro.serve.retrieval import RagPipeline, RagResult
+
+__all__ = ["GenerationResult", "RagPipeline", "RagResult", "ServeEngine"]

@@ -1,0 +1,78 @@
+"""Serving engine: batched prefill → decode generation with KV caches.
+
+One jit'd prefill and one jit'd decode step per (arch, batch, cache_len);
+decode loops on host (matches the serve_step unit the dry-run lowers).
+Greedy or temperature sampling; per-request stop handling via done mask.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import NULL_CTX, ShardingCtx
+from repro.models.model import build_model
+
+
+@dataclass
+class GenerationResult:
+    tokens: np.ndarray      # (B, max_new) generated ids
+    logits_last: np.ndarray
+    steps: int
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, ctx: ShardingCtx = NULL_CTX):
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.params = params
+        self.ctx = ctx
+        self._prefill = jax.jit(
+            lambda p, batch, capacity: self.model.prefill(
+                p, batch, ctx, capacity=capacity
+            ),
+            static_argnums=(2,),
+        )
+        self._decode = jax.jit(
+            lambda p, tok, cache, t: self.model.decode(p, tok, cache, t, ctx)
+        )
+
+    def generate(
+        self,
+        batch: Dict[str, jax.Array],
+        max_new_tokens: int = 32,
+        *,
+        temperature: float = 0.0,
+        eos_id: Optional[int] = None,
+        seed: int = 0,
+    ) -> GenerationResult:
+        prompt_len = batch["tokens"].shape[1]
+        logits, cache = self._prefill(
+            self.params, batch, prompt_len + max_new_tokens
+        )
+        B = logits.shape[0]
+        t = jnp.full((B,), prompt_len, jnp.int32)
+        key = jax.random.PRNGKey(seed)
+        done = np.zeros(B, bool)
+        out = np.zeros((B, max_new_tokens), np.int32)
+        for i in range(max_new_tokens):
+            if temperature > 0:
+                key, sk = jax.random.split(key)
+                tok = jax.random.categorical(sk, logits / temperature, axis=-1)
+            else:
+                tok = jnp.argmax(logits, axis=-1)
+            tok_np = np.asarray(tok, np.int32)
+            out[:, i] = np.where(done, 0, tok_np)
+            if eos_id is not None:
+                done |= tok_np == eos_id
+                if done.all():
+                    return GenerationResult(out[:, : i + 1], np.asarray(logits), i + 1)
+            logits, cache = self._decode(
+                self.params, tok[:, None].astype(jnp.int32), cache, t + i
+            )
+        return GenerationResult(out, np.asarray(logits), max_new_tokens)

@@ -1,0 +1,66 @@
+"""Retrieval-augmented serving: GATE-accelerated ANNS feeding generation.
+
+The paper's module in its production seat (RAG, §1): the request embedding
+hits the GATE index, retrieved neighbor ids map to context token blocks, and
+the serving engine generates conditioned on [retrieved ‖ prompt].
+
+``RagPipeline`` keeps the two halves composable: any GateIndex (or the
+sharded core.distributed search step) × any ServeEngine.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.gate_index import GateIndex
+from repro.serve.engine import GenerationResult, ServeEngine
+
+
+@dataclass
+class RagResult:
+    retrieved_ids: np.ndarray  # (B, k) database ids
+    generation: GenerationResult
+
+
+class RagPipeline:
+    def __init__(
+        self,
+        index: GateIndex,
+        engine: ServeEngine,
+        doc_tokens: np.ndarray,   # (N_db, doc_len) token block per db vector
+        *,
+        k: int = 4,
+        beam_width: int = 64,
+    ):
+        self.index = index
+        self.engine = engine
+        self.doc_tokens = doc_tokens
+        self.k = k
+        self.beam_width = beam_width
+
+    def _splice(self, prompt_tokens: np.ndarray, ids: np.ndarray) -> np.ndarray:
+        """[doc_0 ‖ … ‖ doc_{k-1} ‖ prompt] per request."""
+        B = prompt_tokens.shape[0]
+        docs = self.doc_tokens[np.maximum(ids, 0)]       # (B, k, doc_len)
+        docs = docs.reshape(B, -1)
+        return np.concatenate([docs, prompt_tokens], axis=1).astype(np.int32)
+
+    def __call__(
+        self,
+        query_vecs: np.ndarray,      # (B, d) request embeddings
+        prompt_tokens: np.ndarray,   # (B, S_prompt)
+        max_new_tokens: int = 32,
+        **gen_kw,
+    ) -> RagResult:
+        res = self.index.search(
+            query_vecs, k=self.k, beam_width=self.beam_width
+        )
+        ids = np.asarray(res.ids)
+        tokens = self._splice(prompt_tokens, ids)
+        gen = self.engine.generate(
+            {"tokens": jnp.asarray(tokens)}, max_new_tokens, **gen_kw
+        )
+        return RagResult(retrieved_ids=ids, generation=gen)

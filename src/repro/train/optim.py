@@ -1,0 +1,133 @@
+"""Optimizers (our own implementation — no optax in this environment).
+
+Functional API:
+    opt = adamw(lr=3e-4, warmup=100, total_steps=10_000)
+    state = opt.init(params)
+    params, state, gnorm = opt.apply(params, grads, state)
+
+Optimizer moments mirror the parameter pytree, so FSDP sharding of params
+automatically extends to optimizer state (same logical axes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+    )
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    g = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-9))
+    return jax.tree.map(lambda x: (x * scale).astype(x.dtype), tree), g
+
+
+def warmup_cosine(lr: float, warmup: int, total_steps: int, final_frac: float = 0.1):
+    def schedule(step):
+        step = step.astype(jnp.float32)
+        warm = lr * jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        prog = jnp.clip(
+            (step - warmup) / jnp.maximum(total_steps - warmup, 1), 0.0, 1.0
+        )
+        cos = lr * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return schedule
+
+
+def constant_lr(lr: float):
+    return lambda step: jnp.full((), lr, jnp.float32)
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    apply: Callable  # (params, grads, state) -> (params, state, gnorm)
+
+
+def adamw(
+    lr: float = 3e-4,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    grad_clip: Optional[float] = 1.0,
+    warmup: int = 0,
+    total_steps: int = 0,
+) -> Optimizer:
+    sched = (
+        warmup_cosine(lr, warmup, total_steps) if total_steps else constant_lr(lr)
+    )
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def apply(params, grads, state):
+        if grad_clip is not None:
+            grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        else:
+            gnorm = global_norm(grads)
+        step = state["step"] + 1
+        lr_t = sched(step)
+        b1t = 1 - b1 ** step.astype(jnp.float32)
+        b2t = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            gf = g.astype(jnp.float32)
+            m2 = b1 * m + (1 - b1) * gf
+            v2 = b2 * v + (1 - b2) * gf * gf
+            mhat = m2 / b1t
+            vhat = v2 / b2t
+            delta = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                delta = delta + weight_decay * p.astype(jnp.float32)
+            p2 = p.astype(jnp.float32) - lr_t * delta
+            return p2.astype(p.dtype), m2, v2
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+        out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        return new_p, {"m": new_m, "v": new_v, "step": step}, gnorm
+
+    return Optimizer(init=init, apply=apply)
+
+
+def sgd(lr: float = 1e-2, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        return {
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def apply(params, grads, state):
+        gnorm = global_norm(grads)
+
+        def upd(p, g, m):
+            m2 = momentum * m + g.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * m2).astype(p.dtype), m2
+
+        pairs = jax.tree.map(upd, params, grads, state["m"])
+        new_p = jax.tree.map(lambda t: t[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda t: t[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"m": new_m, "step": state["step"] + 1}, gnorm
+
+    return Optimizer(init=init, apply=apply)

@@ -1,0 +1,39 @@
+import os
+import sys
+
+# NOTE: no XLA_FLAGS here — smoke tests must see the real single CPU device.
+# Multi-device tests spawn subprocesses that set
+# --xla_force_host_platform_device_count themselves (see tests/_subproc.py).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def small_db():
+    from repro.data.synthetic import make_database
+
+    db, assign = make_database("sift10m-like", 2000, seed=0)
+    return db, assign
+
+
+@pytest.fixture(scope="session")
+def small_nsg(small_db):
+    from repro.graphs.nsg import build_nsg
+
+    db, _ = small_db
+    return build_nsg(db, R=32, knn_k=32, search_l=64, pool_size=96)
+
+
+@pytest.fixture(scope="session")
+def uniform_db():
+    rng = np.random.default_rng(0)
+    return rng.standard_normal((2000, 64)).astype(np.float32)
+
+
+@pytest.fixture(scope="session")
+def uniform_nsg(uniform_db):
+    from repro.graphs.nsg import build_nsg
+
+    return build_nsg(uniform_db, R=32, knn_k=32, search_l=64, pool_size=96)

@@ -1,0 +1,178 @@
+"""GATE core: subgraph sampling, WL embedding, query samples, two-tower."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.samples import hop_counts, make_samples, top1_targets
+from repro.core.subgraph import sample_all_subgraphs, sample_subgraph
+from repro.core.topo_embed import wl_embed, wl_embed_tokens
+from repro.core.twotower import (
+    TwoTowerConfig,
+    hub_tower,
+    info_nce,
+    init_params,
+    query_tower,
+    train_two_tower,
+)
+from repro.data.synthetic import make_database, make_queries_in_dist
+
+
+# ----------------------------------------------------------------- subgraph
+def test_subgraph_hop_bound(small_db, small_nsg):
+    db, _ = small_db
+    sg = sample_subgraph(db, small_nsg.neighbors, hub=5, h=3, max_nodes=128)
+    assert sg.nodes[0] == 5 and sg.hops[0] == 0
+    assert sg.hops.max() <= 3
+    assert len(sg.nodes) <= 128
+    # edges reference valid local indices
+    if len(sg.edges):
+        assert sg.edges.max() < len(sg.nodes)
+        assert sg.edges.min() >= 0
+
+
+def test_subgraph_nodes_unique(small_db, small_nsg):
+    db, _ = small_db
+    sg = sample_subgraph(db, small_nsg.neighbors, hub=11, h=4)
+    assert len(np.unique(sg.nodes)) == len(sg.nodes)
+
+
+def test_subgraph_larger_h_grows(small_db, small_nsg):
+    db, _ = small_db
+    sizes = [
+        len(sample_subgraph(db, small_nsg.neighbors, hub=3, h=h,
+                            max_nodes=10_000).nodes)
+        for h in (1, 2, 4)
+    ]
+    assert sizes[0] <= sizes[1] <= sizes[2]
+    assert sizes[2] > sizes[0]
+
+
+# ----------------------------------------------------------------- WL embed
+def _toy_subgraph(edges, n, hops=None):
+    from repro.core.subgraph import Subgraph
+
+    return Subgraph(
+        nodes=np.arange(n, dtype=np.int64),
+        edges=np.asarray(edges, np.int64).reshape(-1, 2),
+        hops=np.asarray(hops if hops is not None else [0] * n, np.int32),
+    )
+
+
+def test_wl_embed_deterministic():
+    sg = _toy_subgraph([(0, 1), (1, 2), (2, 3)], 4, [0, 1, 1, 2])
+    a = wl_embed(sg, 64)
+    b = wl_embed(sg, 64)
+    np.testing.assert_array_equal(a, b)
+    assert abs(np.linalg.norm(a) - 1.0) < 1e-5
+
+
+def test_wl_embed_distinguishes_structures():
+    path = _toy_subgraph([(0, 1), (1, 2), (2, 3)], 4, [0, 1, 2, 3])
+    star = _toy_subgraph([(0, 1), (0, 2), (0, 3)], 4, [0, 1, 1, 1])
+    d = np.linalg.norm(wl_embed(path, 64) - wl_embed(star, 64))
+    assert d > 0.1
+
+
+def test_wl_embed_isomorphism_invariance():
+    """Same structure, different node order → identical signature (labels are
+    structural, not id-based)."""
+    g1 = _toy_subgraph([(0, 1), (1, 2)], 3, [0, 1, 2])
+    g2 = _toy_subgraph([(0, 2), (2, 1)], 3, [0, 2, 1])  # relabeled path
+    np.testing.assert_allclose(wl_embed(g1, 64), wl_embed(g2, 64), atol=1e-6)
+
+
+def test_wl_tokens_shape():
+    sg = _toy_subgraph([(0, 1)], 2, [0, 1])
+    toks = wl_embed_tokens(sg, 32, wl_iters=3)
+    assert toks.shape == (4, 32)
+
+
+# ------------------------------------------------------------- hop counts
+def test_hop_counts_line_graph():
+    # 0 -> 1 -> 2 -> 3 (padded adjacency, R=2)
+    nbrs = np.full((4, 2), -1, np.int64)
+    for i in range(3):
+        nbrs[i, 0] = i + 1
+    hops = hop_counts(nbrs, targets=np.array([3]), hub_ids=np.array([0, 1, 3]))
+    np.testing.assert_array_equal(hops[0], [3, 2, 0])
+
+
+def test_hop_counts_unreachable_capped():
+    nbrs = np.full((4, 2), -1, np.int64)  # no edges
+    hops = hop_counts(
+        nbrs, targets=np.array([3]), hub_ids=np.array([0]), max_hops=16
+    )
+    assert hops[0, 0] == 16
+
+
+def test_make_samples_thresholds():
+    hop = np.array(
+        [[1, 10], [2, 11], [3, 30], [9, 12], [30, 10]], np.int32
+    )  # (Q=5, n_c=2)
+    s = make_samples(hop, t_pos=2, t_neg=10)
+    # hub 0: min=1 → pos {q0(1),q1(2),q2(3)}; neg ≥ 11 → {q4(30)}
+    np.testing.assert_array_equal(s.pos[0], [0, 1, 2])
+    np.testing.assert_array_equal(s.neg[0], [4])
+    # hub 1: min=10 → pos {q0,q1,q3,q4}; neg ≥ 20 → {q2}
+    np.testing.assert_array_equal(s.pos[1], [0, 1, 3, 4])
+    np.testing.assert_array_equal(s.neg[1], [2])
+
+
+def test_top1_targets(small_db):
+    db, _ = small_db
+    q = db[[5, 17]] + 1e-4
+    np.testing.assert_array_equal(top1_targets(db, q), [5, 17])
+
+
+# ------------------------------------------------------------- two-tower
+def test_tower_outputs_normalized():
+    cfg = TwoTowerConfig(d_p=32, d_u=16)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    p = jnp.asarray(np.random.default_rng(0).standard_normal((5, 32)), jnp.float32)
+    u = jnp.asarray(np.random.default_rng(1).standard_normal((5, 4, 16)), jnp.float32)
+    z = hub_tower(params, cfg, p, u)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(z), axis=1), 1.0, atol=1e-5)
+    zq = query_tower(params, cfg, p)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(zq), axis=1), 1.0, atol=1e-5)
+
+
+def test_fusion_ablation_changes_output():
+    cfg_on = TwoTowerConfig(d_p=32, d_u=16, use_fusion=True)
+    cfg_off = TwoTowerConfig(d_p=32, d_u=16, use_fusion=False)
+    params = init_params(cfg_on, jax.random.PRNGKey(0))
+    p = jnp.ones((3, 32))
+    u = jnp.asarray(np.random.default_rng(2).standard_normal((3, 4, 16)), jnp.float32)
+    z_on = hub_tower(params, cfg_on, p, u)
+    z_off = hub_tower(params, cfg_off, p, u)
+    assert float(jnp.abs(z_on - z_off).max()) > 1e-3
+
+
+def test_infonce_training_decreases_loss():
+    """Synthetic separable task: hub i's positives cluster near direction i."""
+    rng = np.random.default_rng(0)
+    d, n_hubs, n_q = 16, 8, 256
+    hub_vecs = rng.standard_normal((n_hubs, d)).astype(np.float32) * 3
+    u_toks = rng.standard_normal((n_hubs, 4, 8)).astype(np.float32)
+    owner = rng.integers(0, n_hubs, n_q)
+    queries = (hub_vecs[owner] + rng.standard_normal((n_q, d)) * 0.3).astype(
+        np.float32
+    )
+
+    class FakeSamples:
+        pos = [np.where(owner == i)[0] for i in range(n_hubs)]
+        neg = [np.where(owner != i)[0] for i in range(n_hubs)]
+
+    cfg = TwoTowerConfig(d_p=d, d_u=8, lr=1e-3)
+    params, rep = train_two_tower(
+        cfg, hub_vecs, u_toks, queries, FakeSamples(),
+        epochs=60, batch_hubs=8, seed=0,
+    )
+    assert rep.losses[-1] < rep.losses[0] * 0.7, rep.losses[::20]
+    # learned alignment: each query's best hub should usually be its owner
+    zq = query_tower(params, cfg, jnp.asarray(queries))
+    zh = hub_tower(params, cfg, jnp.asarray(hub_vecs), jnp.asarray(u_toks))
+    pred = np.asarray(jnp.argmax(zq @ zh.T, axis=1))
+    acc = (pred == owner).mean()
+    assert acc > 0.6, acc

@@ -1,0 +1,72 @@
+"""End-to-end GateIndex: build, search, ablations, persistence, speed-up."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import GateConfig, GateIndex
+from repro.data.synthetic import make_database, train_eval_query_split
+from repro.graphs.knn import exact_knn, recall_at_k
+
+GCFG = GateConfig(n_hubs=48, epochs=60, batch_hubs=48, subgraph_max_nodes=64)
+
+
+@pytest.fixture(scope="module")
+def built_index():
+    from repro.graphs.nsg import build_nsg
+
+    db, _ = make_database("sift10m-like", 2000, seed=0)
+    nsg = build_nsg(db, R=32, knn_k=32, search_l=64, pool_size=96)
+    tq, eq = train_eval_query_split(db, 384, 96)
+    idx = GateIndex.from_graph(db, nsg.neighbors, nsg.enter_id, tq, GCFG)
+    return idx, eq
+
+
+def test_build_report_complete(built_index):
+    idx, _ = built_index
+    rep = idx.build_report
+    assert rep["loss_last"] < rep["loss_first"]
+    assert rep["samples"]["hub_with_no_pos"] == 0
+
+
+def test_search_beats_baseline_at_matched_budget(built_index):
+    idx, eq = built_index
+    true_ids, _ = exact_knn(eq, idx.db, 10)
+    res_g = idx.search(eq, k=10, beam_width=32, max_hops=128)
+    res_b = idx.search_baseline(eq, k=10, beam_width=32, max_hops=128)
+    rec_g = recall_at_k(np.asarray(res_g.ids), true_ids, 10)
+    rec_b = recall_at_k(np.asarray(res_b.ids), true_ids, 10)
+    assert rec_g >= rec_b - 0.02, (rec_g, rec_b)  # GATE ≥ baseline (margin)
+
+
+def test_entry_points_are_hubs(built_index):
+    idx, eq = built_index
+    entries = np.asarray(idx.select_entries(eq[:16]))
+    assert np.isin(entries, idx.hubs.ids).all()
+
+
+def test_save_load_roundtrip(built_index, tmp_path):
+    idx, eq = built_index
+    path = os.path.join(tmp_path, "gate.pkl")
+    idx.save(path)
+    idx2 = GateIndex.load(path)
+    r1 = idx.search(eq[:8], k=5, beam_width=16, max_hops=64)
+    r2 = idx2.search(eq[:8], k=5, beam_width=16, max_hops=64)
+    np.testing.assert_array_equal(np.asarray(r1.ids), np.asarray(r2.ids))
+
+
+def test_ablation_variants_build():
+    """GATE w/o H / w/o FE / w/o L all construct and search (Table 4)."""
+    from repro.graphs.nsg import build_nsg
+
+    db, _ = make_database("sift10m-like", 800, seed=4)
+    nsg = build_nsg(db, R=12, knn_k=12, search_l=16, pool_size=32)
+    tq, eq = train_eval_query_split(db, 128, 32)
+    for kw in (
+        {"use_hbkm": False}, {"use_fusion": False}, {"use_contrastive": False}
+    ):
+        g = GateConfig(n_hubs=12, epochs=10, batch_hubs=12,
+                       subgraph_max_nodes=32, **kw)
+        idx = GateIndex.from_graph(db, nsg.neighbors, nsg.enter_id, tq, g)
+        res = idx.search(eq, k=5, beam_width=16, max_hops=64)
+        assert np.asarray(res.ids).shape == (32, 5)

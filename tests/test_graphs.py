@@ -1,0 +1,118 @@
+"""Proximity graph substrate: KNN, NSG construction, beam search recall."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.synthetic import make_database, make_queries_in_dist
+from repro.graphs.knn import exact_knn, knn_graph, medoid, recall_at_k
+from repro.graphs.nsg import build_nsg
+from repro.graphs.search import (
+    batched_search,
+    beam_search_fixed,
+    greedy_descent,
+)
+
+
+def test_exact_knn_matches_numpy():
+    rng = np.random.default_rng(0)
+    db = rng.standard_normal((200, 16)).astype(np.float32)
+    q = rng.standard_normal((10, 16)).astype(np.float32)
+    ids, dists = exact_knn(q, db, 5)
+    d_full = ((q[:, None, :] - db[None, :, :]) ** 2).sum(-1)
+    expect = np.argsort(d_full, axis=1)[:, :5]
+    np.testing.assert_array_equal(np.sort(ids, 1), np.sort(expect, 1))
+    np.testing.assert_allclose(
+        np.sort(dists, 1), np.sort(np.take_along_axis(d_full, expect, 1), 1),
+        rtol=1e-4, atol=1e-3,
+    )
+
+
+def test_knn_graph_excludes_self():
+    rng = np.random.default_rng(1)
+    db = rng.standard_normal((128, 8)).astype(np.float32)
+    g = knn_graph(db, 4)
+    assert (g != np.arange(128)[:, None]).all()
+
+
+def test_nsg_connectivity(small_db, small_nsg):
+    db, _ = small_db
+    nsg = small_nsg
+    n = nsg.n
+    seen = np.zeros(n, bool)
+    stack = [nsg.enter_id]
+    seen[nsg.enter_id] = True
+    while stack:
+        u = stack.pop()
+        for v in nsg.neighbors[u]:
+            if v >= 0 and not seen[v]:
+                seen[v] = True
+                stack.append(int(v))
+    assert seen.all(), f"{(~seen).sum()} nodes unreachable from medoid"
+
+
+def test_nsg_degree_capped(small_nsg):
+    assert (small_nsg.neighbors >= -1).all()
+    assert small_nsg.neighbors.shape[1] == small_nsg.R
+
+
+def test_beam_search_high_recall(uniform_db, uniform_nsg):
+    """Machinery check on uniform data (clustered-data recall is the paper's
+    Limitation I and is covered by the GATE-vs-baseline tests)."""
+    db = uniform_db
+    queries = make_queries_in_dist(db, 64, seed=7)
+    true_ids, _ = exact_knn(queries, db, 10)
+    entries = jnp.full((64, 1), uniform_nsg.enter_id, jnp.int32)
+    res = batched_search(
+        jnp.asarray(db), jnp.asarray(uniform_nsg.neighbors),
+        jnp.asarray(queries), entries, beam_width=64, max_hops=256, k=10,
+    )
+    rec = recall_at_k(np.asarray(res.ids), true_ids, 10)
+    assert rec > 0.9, f"recall@10 {rec}"
+    assert (np.asarray(res.hops) > 0).all()
+
+
+def test_beam_search_fixed_matches_while_variant(small_db, small_nsg):
+    """The fixed-trip variant must find results at least as good (it never
+    stops early)."""
+    db, _ = small_db
+    queries = make_queries_in_dist(db, 16, seed=9)
+    entries = jnp.full((16, 1), small_nsg.enter_id, jnp.int32)
+    res_w = batched_search(
+        jnp.asarray(db), jnp.asarray(small_nsg.neighbors),
+        jnp.asarray(queries), entries, beam_width=32, max_hops=64, k=5,
+    )
+    import jax
+
+    fixed = jax.vmap(
+        lambda q, e: beam_search_fixed(
+            jnp.asarray(db), jnp.asarray(small_nsg.neighbors), q, e,
+            beam_width=32, num_hops=64,
+        )[:2]
+    )
+    ids_f, d_f = fixed(jnp.asarray(queries), entries)
+    assert float(d_f[:, 0].mean()) <= float(res_w.dists[:, 0].mean()) + 1e-3
+
+
+def test_greedy_descent_reaches_local_min():
+    rng = np.random.default_rng(3)
+    vecs = rng.standard_normal((64, 8)).astype(np.float32)
+    g = knn_graph(vecs, 4)
+    q = jnp.asarray(vecs[17] + 0.01 * rng.standard_normal(8).astype(np.float32))
+    out = greedy_descent(
+        jnp.asarray(vecs), jnp.asarray(g), q, jnp.asarray(0, jnp.int32),
+        max_hops=64,
+    )
+    # result must be at least as close as every neighbor of the result
+    d_out = float(((vecs[int(out)] - np.asarray(q)) ** 2).sum())
+    for v in g[int(out)]:
+        assert d_out <= ((vecs[v] - np.asarray(q)) ** 2).sum() + 1e-5
+
+
+def test_medoid_is_central(small_db):
+    db, _ = small_db
+    m = medoid(db)
+    d_m = ((db[m] - db.mean(0)) ** 2).sum()
+    rng = np.random.default_rng(0)
+    rand = rng.integers(0, len(db), 50)
+    d_r = ((db[rand] - db.mean(0)) ** 2).sum(1).mean()
+    assert d_m < d_r

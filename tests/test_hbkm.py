@@ -1,0 +1,65 @@
+"""HBKM (Algorithm 2): balance objective, exact leaf counts, hub extraction."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hbkm import balanced_kmeans, cluster_size_variance, hbkm
+from repro.core.hubs import extract_hubs, kmeans_hubs
+from repro.data.synthetic import make_database
+
+
+def test_balanced_kmeans_modes_agree_on_balance():
+    db, _ = make_database("sift10m-like", 1000, seed=1)
+    a_batch, _ = balanced_kmeans(db, 8, lam=1.0, mode="batch", seed=0)
+    a_greedy, _ = balanced_kmeans(db, 8, lam=1.0, mode="greedy", seed=0)
+    a_plain, _ = balanced_kmeans(db, 8, lam=0.0, mode="batch", seed=0)
+    v_b = cluster_size_variance(a_batch, 8)
+    v_g = cluster_size_variance(a_greedy, 8)
+    v_p = cluster_size_variance(a_plain, 8)
+    # both balanced modes beat the unpenalized baseline
+    assert v_b < v_p
+    assert v_g < v_p
+
+
+def test_hbkm_exact_leaf_count():
+    db, _ = make_database("sift10m-like", 1500, seed=2)
+    for n_c in (7, 16, 33):
+        assign, centers = hbkm(db, n_c, branch_k=4)
+        assert centers.shape == (n_c, db.shape[1])
+        assert assign.min() >= 0 and assign.max() == n_c - 1
+        assert len(np.unique(assign)) == n_c
+
+
+def test_hbkm_balance_beats_plain_kmeans():
+    db, _ = make_database("sift10m-like", 4000, seed=0)
+    h = extract_hubs(db, 32, seed=0)
+    p = kmeans_hubs(db, 32, seed=0)
+    assert cluster_size_variance(h.assign, 32) < cluster_size_variance(
+        p.assign, 32
+    )
+
+
+def test_hub_medoids_belong_to_cluster():
+    db, _ = make_database("sift10m-like", 1000, seed=3)
+    h = extract_hubs(db, 16, seed=0)
+    assert len(set(h.ids.tolist())) == 16
+    for c in range(16):
+        assert h.assign[h.ids[c]] == c  # medoid is a member of its cluster
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(40, 300), n_c=st.integers(2, 12), seed=st.integers(0, 1000)
+)
+def test_hbkm_property(n, n_c, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, 8)).astype(np.float32)
+    assign, centers = hbkm(x, n_c, branch_k=3, iters=3, seed=seed)
+    assert assign.shape == (n,)
+    assert len(np.unique(assign)) == n_c  # every leaf non-empty
+    assert np.isfinite(centers).all()
+
+
+def test_cluster_size_variance_perfect_balance_zero():
+    assign = np.repeat(np.arange(4), 25)
+    assert cluster_size_variance(assign, 4) == 0.0

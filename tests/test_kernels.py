@@ -1,0 +1,139 @@
+"""Per-kernel interpret-mode validation against the pure-jnp oracles:
+shape/dtype sweeps + hypothesis properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.gather_dist import gather_dist
+from repro.kernels.l2dist import l2dist
+from repro.kernels.topk import topk_min
+from repro.kernels.twotower_score import twotower_score
+
+RNG = np.random.default_rng(0)
+
+
+def _randn(*shape, dtype=np.float32):
+    return RNG.standard_normal(shape).astype(dtype)
+
+
+# ------------------------------------------------------------------- l2dist
+@pytest.mark.parametrize(
+    "Q,C,D",
+    [(1, 1, 1), (7, 13, 5), (17, 33, 40), (128, 256, 128),
+     (64, 200, 960), (200, 64, 200), (130, 129, 127)],
+)
+def test_l2dist_shapes(Q, C, D):
+    q, c = _randn(Q, D), _randn(C, D)
+    out = l2dist(jnp.asarray(q), jnp.asarray(c), interpret=True)
+    ref_out = ref.l2dist_ref(jnp.asarray(q), jnp.asarray(c))
+    np.testing.assert_allclose(out, ref_out, rtol=2e-5, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_l2dist_dtypes(dtype):
+    q = jnp.asarray(_randn(32, 64)).astype(dtype)
+    c = jnp.asarray(_randn(48, 64)).astype(dtype)
+    out = l2dist(q, c, interpret=True)
+    ref_out = ref.l2dist_ref(q, c)
+    np.testing.assert_allclose(out, ref_out, rtol=1e-2, atol=1e-2)
+
+
+def test_l2dist_self_distance_zero():
+    x = jnp.asarray(_randn(16, 32))
+    out = l2dist(x, x, interpret=True)
+    assert float(jnp.max(jnp.abs(jnp.diag(out)))) < 1e-3
+
+
+# --------------------------------------------------------------------- topk
+@pytest.mark.parametrize("B,C,k", [(1, 8, 1), (5, 100, 10), (37, 300, 10),
+                                   (128, 512, 32), (64, 130, 64)])
+def test_topk_shapes(B, C, k):
+    d = _randn(B, C)
+    v, i = topk_min(jnp.asarray(d), k, interpret=True)
+    ve, ie = ref.topk_min_ref(jnp.asarray(d), k)
+    np.testing.assert_allclose(v, ve, rtol=1e-6)
+    np.testing.assert_array_equal(i, ie)
+
+
+def test_topk_with_inf_rows():
+    d = np.full((4, 64), 3.4e38, np.float32)
+    d[0, 5], d[0, 9] = -1.0, -2.0
+    v, i = topk_min(jnp.asarray(d), 3, interpret=True)
+    assert i[0, 0] == 9 and i[0, 1] == 5
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    B=st.integers(1, 16), C=st.integers(2, 128),
+    k=st.integers(1, 8), seed=st.integers(0, 2**31),
+)
+def test_topk_property(B, C, k, seed):
+    k = min(k, C)
+    d = np.random.default_rng(seed).standard_normal((B, C)).astype(np.float32)
+    v, i = topk_min(jnp.asarray(d), k, interpret=True)
+    v, i = np.asarray(v), np.asarray(i)
+    # values ascending, match d at the reported index, are the true k smallest
+    assert (np.diff(v, axis=1) >= -1e-6).all()
+    np.testing.assert_allclose(v, np.take_along_axis(d, i, 1), rtol=1e-6)
+    np.testing.assert_allclose(v, np.sort(d, axis=1)[:, :k], rtol=1e-6)
+
+
+# -------------------------------------------------------------- gather_dist
+@pytest.mark.parametrize("B,R,D", [(1, 1, 1), (13, 20, 100), (8, 32, 128),
+                                   (3, 64, 960)])
+def test_gather_dist_shapes(B, R, D):
+    vecs, q = _randn(B, R, D), _randn(B, D)
+    ids = RNG.integers(-1, 50, (B, R)).astype(np.int32)
+    out = gather_dist(
+        jnp.asarray(vecs), jnp.asarray(q), jnp.asarray(ids), interpret=True
+    )
+    expect = ref.gather_dist_ref(
+        jnp.asarray(vecs), jnp.asarray(q), jnp.asarray(ids)
+    )
+    np.testing.assert_allclose(out, expect, rtol=2e-5, atol=2e-4)
+
+
+def test_gather_dist_masks_invalid():
+    vecs, q = _randn(4, 8, 16), _randn(4, 16)
+    ids = np.full((4, 8), -1, np.int32)
+    ids[:, 0] = 3
+    out = np.asarray(gather_dist(
+        jnp.asarray(vecs), jnp.asarray(q), jnp.asarray(ids), interpret=True
+    ))
+    assert np.isfinite(out[:, 0]).all()
+    assert (out[:, 1:] > 1e37).all()
+
+
+# ----------------------------------------------------------- twotower_score
+@pytest.mark.parametrize("B,H,D", [(1, 1, 1), (50, 70, 128), (128, 128, 128),
+                                   (33, 200, 96)])
+def test_twotower_shapes(B, H, D):
+    q, h = _randn(B, D), _randn(H, D)
+    out = twotower_score(jnp.asarray(q), jnp.asarray(h), interpret=True)
+    expect = ref.twotower_score_ref(jnp.asarray(q), jnp.asarray(h))
+    np.testing.assert_allclose(out, expect, rtol=2e-5, atol=2e-5)
+
+
+def test_twotower_range():
+    q, h = _randn(20, 64), _randn(30, 64)
+    out = np.asarray(
+        twotower_score(jnp.asarray(q), jnp.asarray(h), interpret=True)
+    )
+    assert (out <= 1.0 + 1e-5).all() and (out >= -1.0 - 1e-5).all()
+    # self-similarity of identical rows = 1
+    out2 = np.asarray(
+        twotower_score(jnp.asarray(q), jnp.asarray(q), interpret=True)
+    )
+    np.testing.assert_allclose(np.diag(out2), 1.0, atol=1e-5)
+
+
+# ------------------------------------------------------------ ops dispatch
+def test_ops_ref_fallback_on_cpu():
+    from repro.kernels import ops
+
+    q, c = jnp.asarray(_randn(8, 16)), jnp.asarray(_randn(9, 16))
+    out = ops.l2dist(q, c)  # auto → ref on CPU
+    np.testing.assert_allclose(out, ref.l2dist_ref(q, c), rtol=1e-6)

@@ -1,0 +1,150 @@
+"""Per-arch reduced-config smoke tests + serving-consistency checks."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_config, get_reduced
+from repro.configs.base import SHAPES, ShapeSpec, shape_applicable
+from repro.models.model import (
+    active_param_count,
+    build_model,
+    make_cache,
+    make_inputs,
+    model_flops_per_step,
+)
+
+SMOKE = ShapeSpec("smoke", "train", 64, 2)
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_train_step_smoke(arch):
+    cfg = get_reduced(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_inputs(cfg, SMOKE)
+    loss, metrics = jax.jit(lambda p, b: model.loss(p, b))(params, batch)
+    assert jnp.isfinite(loss), arch
+    assert float(loss) > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_decode_step_smoke(arch):
+    cfg = get_reduced(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 2, 64
+    cache = make_cache(cfg, B, S, filled=8)
+    logits, cache2 = jax.jit(model.decode)(
+        params, jnp.zeros((B, 1), jnp.int32), cache, jnp.full((B,), 8, jnp.int32)
+    )
+    assert logits.shape == (B, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits)).all(), arch
+    # cache pytree structure preserved
+    assert set(cache2.keys()) == set(cache.keys())
+
+
+@pytest.mark.parametrize("arch", ["llama3-8b", "mixtral-8x22b", "rwkv6-1.6b",
+                                  "zamba2-1.2b", "seamless-m4t-medium"])
+def test_prefill_decode_consistency(arch):
+    """prefill(prompt) + decode(next) must equal full forward logits."""
+    cfg = get_reduced(arch).with_(remat=False)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    B, S = 2, 32
+    rng = np.random.default_rng(0)
+    toks = rng.integers(2, cfg.vocab_size, (B, S + 1)).astype(np.int32)
+    batch = {"tokens": jnp.asarray(toks[:, :S])}
+    if cfg.family == "audio":
+        frames = rng.standard_normal((B, S, cfg.d_model)).astype(np.float32)
+        batch["frames"] = jnp.asarray(frames)
+    logits_p, cache = jax.jit(
+        lambda p, b: model.prefill(p, b, capacity=S + 1)
+    )(params, batch)
+    logits_d, _ = jax.jit(model.decode)(
+        params, jnp.asarray(toks[:, S : S + 1]), cache,
+        jnp.full((B,), S, jnp.int32),
+    )
+    # reference: full forward over S+1 tokens
+    batch2 = dict(batch, tokens=jnp.asarray(toks))
+    logits_f, _ = jax.jit(model.prefill)(params, batch2)
+    np.testing.assert_allclose(
+        np.asarray(logits_d), np.asarray(logits_f), rtol=2e-3, atol=2e-3
+    )
+
+
+def test_vlm_patch_prefix():
+    cfg = get_reduced("internvl2-26b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, P, S = 2, cfg.num_patches, 32
+    rng = np.random.default_rng(0)
+    batch = {
+        "patches": jnp.asarray(
+            rng.standard_normal((B, P, cfg.patch_dim)).astype(np.float32)
+        ),
+        "tokens": jnp.asarray(rng.integers(2, 100, (B, S)).astype(np.int32)),
+        "labels": jnp.asarray(rng.integers(2, 100, (B, S)).astype(np.int32)),
+    }
+    loss, _ = jax.jit(lambda p, b: model.loss(p, b))(params, batch)
+    assert jnp.isfinite(loss)
+
+
+def test_swa_window_caps_cache():
+    cfg = get_config("mixtral-8x22b")
+    model = build_model(cfg)
+    specs = model.cache_specs(4, 32768)
+    assert specs["k"].shape[2] == cfg.window  # rolling buffer, not 32k
+
+
+def test_ssm_cache_constant_size():
+    cfg = get_config("rwkv6-1.6b")
+    model = build_model(cfg)
+    s1 = model.cache_specs(2, 1024)
+    s2 = model.cache_specs(2, 524288)
+    assert s1["wkv"].shape == s2["wkv"].shape  # O(1) in sequence length
+
+
+def test_long_500k_applicability():
+    long = SHAPES["long_500k"]
+    runnable = {
+        a for a in ARCH_NAMES if shape_applicable(get_config(a), long)[0]
+    }
+    assert runnable == {"mixtral-8x22b", "zamba2-1.2b", "rwkv6-1.6b"}
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_model_flops_positive(arch):
+    cfg = get_config(arch)
+    for shape in SHAPES.values():
+        if not shape_applicable(cfg, shape)[0]:
+            continue
+        assert model_flops_per_step(cfg, shape) > 0
+    assert active_param_count(cfg) > 0
+
+
+def test_moe_active_params_less_than_total():
+    cfg = get_config("mixtral-8x22b")
+    from repro.models.common import count_params
+
+    model = build_model(cfg)
+    total = count_params(model.param_table())
+    active = active_param_count(cfg)
+    assert active < total * 0.5  # top-2 of 8 experts
+
+
+def test_param_counts_match_published():
+    """Sanity: configured dims land near the advertised parameter counts."""
+    from repro.models.common import count_params
+
+    expected = {
+        "llama3-8b": (8.0e9, 0.15),
+        "mistral-large-123b": (123e9, 0.10),
+        "mixtral-8x22b": (141e9, 0.15),
+        "rwkv6-1.6b": (1.6e9, 0.25),
+        "gemma-2b": (2.5e9, 0.25),   # 2b + big embed table
+    }
+    for arch, (n, tol) in expected.items():
+        model = build_model(get_config(arch))
+        got = count_params(model.param_table())
+        assert abs(got - n) / n < tol, (arch, got, n)
