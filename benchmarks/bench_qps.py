@@ -1,5 +1,11 @@
 """Fig. 5 reproduction: QPS vs recall@10 across dataset profiles, GATE vs the
-four competitor entry strategies on the same NSG."""
+four competitor entry strategies on the same NSG.
+
+``--instrument`` (default on) additionally emits per-query hop / dist-eval
+histograms into the metrics section of the JSON artifact and a build-phase
+span trace (chrome://tracing) — QPS numbers are still measured on the
+uninstrumented search program (see benchmarks/common.py).
+"""
 from __future__ import annotations
 
 import argparse
@@ -9,6 +15,7 @@ from benchmarks.common import (
     load_workload,
     measure_entry_strategy,
     save_json,
+    setup_observability,
 )
 
 PROFILES = {
@@ -23,13 +30,16 @@ PROFILES = {
 }
 
 
-def run(mode: str = "quick", seed: int = 0):
+def run(mode: str = "quick", seed: int = 0, instrument: bool = True):
+    setup_observability("qps", trace=instrument)
     results = {}
     for profile, n in PROFILES[mode]:
         w = load_workload(profile, n, seed=seed)
         per = {}
         for name, fn in entry_strategies(w).items():
-            per[name] = measure_entry_strategy(w, fn)
+            per[name] = measure_entry_strategy(
+                w, fn, name=name, instrument=instrument
+            )
         results[profile] = per
         # headline: speed-up at the highest matched recall@10
         best = _speedup_at_matched_recall(per)
@@ -64,5 +74,8 @@ def _speedup_at_matched_recall(per: dict) -> str:
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", default="quick", choices=["quick", "full"])
+    ap.add_argument("--no-instrument", dest="instrument",
+                    action="store_false",
+                    help="skip telemetry collection (pure QPS run)")
     args = ap.parse_args()
-    run(args.mode)
+    run(args.mode, instrument=args.instrument)

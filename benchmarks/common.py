@@ -4,6 +4,19 @@ Every benchmark reports JSON into experiments/bench/ — benchmarks/run.py
 aggregates.  Scales are CPU-sized surrogates of the paper's datasets (same
 dims, clusterability per §3); the paper's *relative* claims (speed-up vs
 baselines at matched recall) are what we measure.
+
+Reporting goes through ``repro.obs``: ``setup_observability`` enables the
+unified metrics registry and the chrome-trace tracer, and every
+``save_json`` artifact carries the same schema —
+
+    {"benchmark": ..., "results": ...,        # benchmark-specific payload
+     "metrics": <registry snapshot>,          # counters/gauges/histograms
+     "spans": <span name → count/total_s>,    # host-side phase timings
+     "trace": <path to chrome://tracing file or null>}
+
+Timed search sweeps stay *uninstrumented* (the exact serving HLO — QPS is
+measured on the same program production runs); telemetry comes from one
+extra instrumented call per sweep point.
 """
 from __future__ import annotations
 
@@ -17,6 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import GateConfig, GateIndex
 from repro.core.baselines import (
     build_hash_probe,
@@ -37,6 +51,18 @@ OUT_DIR = os.environ.get("BENCH_OUT", "experiments/bench")
 
 NSG_KW = dict(R=32, knn_k=32, search_l=64, pool_size=96)
 GATE_KW = dict(n_hubs=64, epochs=300, batch_hubs=64, subgraph_max_nodes=96)
+
+
+def setup_observability(name: str, trace: bool = True) -> None:
+    """Fresh registry + (optionally) a streaming chrome trace for one
+    benchmark run.  Build-phase spans (gate.build.*) recorded from here on
+    land in ``experiments/bench/<name>_trace.json``."""
+    reg = obs.get_registry()
+    reg.reset()
+    reg.enable()
+    if trace:
+        os.makedirs(OUT_DIR, exist_ok=True)
+        obs.get_tracer().start(os.path.join(OUT_DIR, f"{name}_trace.json"))
 
 
 @dataclass
@@ -66,13 +92,15 @@ def load_workload(
     if key in _CACHE:
         return _CACHE[key]
     db, _ = make_database(profile, n, seed=seed)
-    nsg = build_nsg(db, **NSG_KW)
+    with obs.span("gate.build.nsg", n=n, profile=profile):
+        nsg = build_nsg(db, **NSG_KW)
     tq, eq = train_eval_query_split(
         db, n_train_q, n_eval_q, seed=seed + 1, ood_fraction=ood_fraction
     )
     gcfg = GateConfig(**{**GATE_KW, **(gate_kw or {}), "seed": seed})
     index = GateIndex.from_graph(db, nsg.neighbors, nsg.enter_id, tq, gcfg)
-    true_ids, _ = exact_knn(eq, db, 100)
+    with obs.span("bench.ground_truth", n_queries=len(eq)):
+        true_ids, _ = exact_knn(eq, db, 100)
     w = Workload(profile, db, tq, eq, true_ids, nsg, index)
     _CACHE[key] = w
     return w
@@ -85,38 +113,64 @@ def measure_entry_strategy(
     beam_widths=(8, 16, 32, 64, 128),
     k: int = 10,
     repeats: int = 3,
+    name: str = "strategy",
+    instrument: bool = False,
 ) -> List[dict]:
-    """Sweep beam width; report recall@k/recall@1, QPS, hops per point."""
+    """Sweep beam width; report recall@k/recall@1, QPS, hops per point.
+
+    The timed loop always runs ``instrument=False`` (identical HLO to
+    serving); ``instrument=True`` adds ONE extra instrumented search per
+    sweep point, folds its per-query telemetry into the registry
+    (``bench.search.hops`` / ``bench.search.dist_evals`` / …, labeled per
+    strategy via ``bench.<name>.*``) and attaches the summary to the row.
+    """
     dev = {
         "db": jnp.asarray(w.db),
         "nbrs": jnp.asarray(w.nsg.neighbors),
         "q": jnp.asarray(w.eval_q),
     }
+    reg = obs.get_registry()
     out = []
     entries = jnp.asarray(entries_fn(w.eval_q))
     for bw in beam_widths:
+        max_hops = max(4 * bw, 64)
         fn = lambda: batched_search(
             dev["db"], dev["nbrs"], dev["q"], entries,
-            beam_width=bw, max_hops=max(4 * bw, 64), k=max(k, 10),
+            beam_width=bw, max_hops=max_hops, k=max(k, 10),
         )
         res = fn()
         jax.block_until_ready(res.ids)
-        t0 = time.time()
-        for _ in range(repeats):
-            res = fn()
-            jax.block_until_ready(res.ids)
-        dt = (time.time() - t0) / repeats
+        with obs.span("bench.sweep", strategy=name, beam_width=bw):
+            t0 = time.time()
+            for _ in range(repeats):
+                res = fn()
+                jax.block_until_ready(res.ids)
+            dt = (time.time() - t0) / repeats
+        reg.histogram(
+            "bench.sweep_seconds", "timed sweep wall time",
+            obs.LATENCY_BUCKETS,
+        ).observe(dt)
         ids = np.asarray(res.ids)
-        out.append(
-            {
-                "beam_width": bw,
-                "recall@1": recall_at_k(ids, w.true_ids, 1),
-                f"recall@{k}": recall_at_k(ids, w.true_ids, k),
-                "qps": len(w.eval_q) / dt,
-                "mean_hops": float(np.asarray(res.hops).mean()),
-                "mean_dist_evals": float(np.asarray(res.dist_evals).mean()),
-            }
-        )
+        row = {
+            "strategy": name,
+            "beam_width": bw,
+            "recall@1": recall_at_k(ids, w.true_ids, 1),
+            f"recall@{k}": recall_at_k(ids, w.true_ids, k),
+            "qps": len(w.eval_q) / dt,
+            "mean_hops": float(np.asarray(res.hops).mean()),
+            "mean_dist_evals": float(np.asarray(res.dist_evals).mean()),
+        }
+        if instrument:
+            _, tele = batched_search(
+                dev["db"], dev["nbrs"], dev["q"], entries,
+                beam_width=bw, max_hops=max_hops, k=max(k, 10),
+                instrument=True,
+            )
+            obs.record_search_telemetry(tele, prefix="bench.search")
+            obs.record_search_telemetry(tele, prefix=f"bench.{name}")
+            obs.warn_on_ring_overflow(tele, 512, where=f"bench[{name}]")
+            row["telemetry"] = obs.summarize(tele)
+        out.append(row)
     return out
 
 
@@ -185,8 +239,18 @@ def achievable_target(
 
 
 def save_json(name: str, payload):
+    """Write the unified benchmark artifact: results + registry snapshot +
+    span summary + trace pointer (one schema for every bench_*.py)."""
     os.makedirs(OUT_DIR, exist_ok=True)
+    tracer = obs.get_tracer()
+    doc = {
+        "benchmark": name,
+        "results": payload,
+        "metrics": obs.get_registry().snapshot(),
+        "spans": tracer.span_summary(),
+        "trace": tracer.path if tracer.enabled else None,
+    }
     path = os.path.join(OUT_DIR, f"{name}.json")
     with open(path, "w") as f:
-        json.dump(payload, f, indent=1)
+        json.dump(doc, f, indent=1)
     return path

@@ -43,12 +43,15 @@ def main():
         "param_sensitivity": bench_param_sensitivity.run,
         "build": bench_build.run,
     }
+    from benchmarks.common import setup_observability
+
     only = set(args.only.split(",")) if args.only else None
     failures = []
     for name, fn in suite.items():
         if only and name not in only:
             continue
         print(f"\n===== {name} ({args.mode}) =====", flush=True)
+        setup_observability(name)  # fresh registry + trace per benchmark
         t0 = time.time()
         try:
             fn(args.mode)

@@ -39,6 +39,12 @@ from repro.core.twotower import (
 )
 from repro.graphs.nsg import NSG, build_nsg
 from repro.graphs.search import SearchResult, batched_search
+from repro.obs import (
+    SearchTelemetry,
+    record_search_telemetry,
+    span,
+    warn_on_ring_overflow,
+)
 
 
 @dataclass(frozen=True)
@@ -101,40 +107,50 @@ class GateIndex:
     ) -> "GateIndex":
         report = {}
         t0 = time.time()
-        if gcfg.use_hbkm:
-            hubs = extract_hubs(
-                db, gcfg.n_hubs, branch_k=gcfg.hbkm_branch,
-                lam=gcfg.hbkm_lam, seed=gcfg.seed,
-            )
-        else:
-            hubs = kmeans_hubs(db, gcfg.n_hubs, seed=gcfg.seed)
+        with span("gate.build.hubs", n_hubs=gcfg.n_hubs,
+                  method="hbkm" if gcfg.use_hbkm else "kmeans"):
+            if gcfg.use_hbkm:
+                hubs = extract_hubs(
+                    db, gcfg.n_hubs, branch_k=gcfg.hbkm_branch,
+                    lam=gcfg.hbkm_lam, seed=gcfg.seed,
+                )
+            else:
+                hubs = kmeans_hubs(db, gcfg.n_hubs, seed=gcfg.seed)
         report["t_hubs"] = time.time() - t0
 
         t0 = time.time()
-        sgs = sample_all_subgraphs(
-            db, neighbors, hubs.ids, h=gcfg.h,
-            max_nodes=gcfg.subgraph_max_nodes, seed=gcfg.seed,
-        )
-        u_toks = embed_all(sgs, gcfg.d_u, wl_iters=gcfg.wl_iters, seed=gcfg.seed)
+        with span("gate.build.subgraphs", h=gcfg.h,
+                  max_nodes=gcfg.subgraph_max_nodes):
+            sgs = sample_all_subgraphs(
+                db, neighbors, hubs.ids, h=gcfg.h,
+                max_nodes=gcfg.subgraph_max_nodes, seed=gcfg.seed,
+            )
+        with span("gate.build.topo_embed", d_u=gcfg.d_u,
+                  wl_iters=gcfg.wl_iters):
+            u_toks = embed_all(
+                sgs, gcfg.d_u, wl_iters=gcfg.wl_iters, seed=gcfg.seed
+            )
         report["t_topo"] = time.time() - t0
         report["subgraph_nodes_mean"] = float(
             np.mean([len(s.nodes) for s in sgs])
         )
 
         t0 = time.time()
-        targets = top1_targets(db, train_queries)
-        if gcfg.hop_mode == "greedy":
-            from repro.core.samples import greedy_hops
+        with span("gate.build.samples", hop_mode=gcfg.hop_mode,
+                  n_queries=len(train_queries)):
+            targets = top1_targets(db, train_queries)
+            if gcfg.hop_mode == "greedy":
+                from repro.core.samples import greedy_hops
 
-            hops = greedy_hops(
-                db, neighbors, train_queries, hubs.ids, targets,
-                beam_width=gcfg.hop_beam, max_hops=gcfg.hop_max,
+                hops = greedy_hops(
+                    db, neighbors, train_queries, hubs.ids, targets,
+                    beam_width=gcfg.hop_beam, max_hops=gcfg.hop_max,
+                )
+            else:
+                hops = hop_counts(neighbors, targets, hubs.ids)
+            samples = make_samples(
+                hops, t_pos=gcfg.t_pos, t_neg=gcfg.t_neg, seed=gcfg.seed
             )
-        else:
-            hops = hop_counts(neighbors, targets, hubs.ids)
-        samples = make_samples(
-            hops, t_pos=gcfg.t_pos, t_neg=gcfg.t_neg, seed=gcfg.seed
-        )
         report["t_samples"] = time.time() - t0
         report["samples"] = samples.stats()
 
@@ -143,24 +159,28 @@ class GateIndex:
             lr=gcfg.lr,
         )
         t0 = time.time()
-        if gcfg.use_contrastive:
-            params, train_rep = train_two_tower(
-                tcfg, db[hubs.ids], u_toks, train_queries, samples,
-                epochs=gcfg.epochs, batch_hubs=gcfg.batch_hubs, seed=gcfg.seed,
-            )
-            report["loss_first"] = train_rep.losses[0]
-            report["loss_last"] = train_rep.losses[-1]
-        else:  # ablation GATE w/o L: random-init towers, no training
-            from repro.core.twotower import init_params
+        with span("gate.build.train_towers", epochs=gcfg.epochs,
+                  contrastive=gcfg.use_contrastive):
+            if gcfg.use_contrastive:
+                params, train_rep = train_two_tower(
+                    tcfg, db[hubs.ids], u_toks, train_queries, samples,
+                    epochs=gcfg.epochs, batch_hubs=gcfg.batch_hubs,
+                    seed=gcfg.seed,
+                )
+                report["loss_first"] = train_rep.losses[0]
+                report["loss_last"] = train_rep.losses[-1]
+            else:  # ablation GATE w/o L: random-init towers, no training
+                from repro.core.twotower import init_params
 
-            params = init_params(tcfg, jax.random.PRNGKey(gcfg.seed))
+                params = init_params(tcfg, jax.random.PRNGKey(gcfg.seed))
         report["t_train"] = time.time() - t0
 
-        reps = np.asarray(
-            hub_tower(params, tcfg, jnp.asarray(db[hubs.ids], jnp.float32),
-                      jnp.asarray(u_toks, jnp.float32))
-        )
-        nav = ng.build_nav_graph(reps, s=gcfg.s_edges)
+        with span("gate.build.nav_graph", s=gcfg.s_edges):
+            reps = np.asarray(
+                hub_tower(params, tcfg, jnp.asarray(db[hubs.ids], jnp.float32),
+                          jnp.asarray(u_toks, jnp.float32))
+            )
+            nav = ng.build_nav_graph(reps, s=gcfg.s_edges)
         return cls(
             db=db, neighbors=neighbors, enter_id=enter_id, hubs=hubs,
             tower_params=params, tower_cfg=tcfg, nav=nav, gcfg=gcfg,
@@ -176,7 +196,9 @@ class GateIndex:
         nsg: Optional[NSG] = None,
         **nsg_kw,
     ) -> "GateIndex":
-        nsg = nsg or build_nsg(db, **nsg_kw)
+        if nsg is None:
+            with span("gate.build.nsg", n=len(db)):
+                nsg = build_nsg(db, **nsg_kw)
         return cls.from_graph(
             db, nsg.neighbors, nsg.enter_id, train_queries, gcfg
         )
@@ -192,18 +214,23 @@ class GateIndex:
             }
         return self._dev
 
-    def select_entries(self, queries: jax.Array) -> jax.Array:
+    def select_entries(self, queries: jax.Array, *, instrument: bool = False):
         """(B, probe_width) base-graph entry ids chosen by the model.
 
         Small hub sets: one fused twotower_score matmul over every hub
         (kernels/twotower_score on TPU).  Large hub sets: greedy cosine
-        descent on the navigation graph (avoids |V| scores per query)."""
+        descent on the navigation graph (avoids |V| scores per query).
+
+        ``instrument=True`` additionally returns the per-query nav-graph
+        descent length (zeros on the flat-score path, which takes no hops).
+        """
         dev = self._device()
         z_q = query_tower(
             self.tower_params, self.tower_cfg,
             jnp.asarray(queries, jnp.float32),
         )
         w = self.gcfg.probe_width
+        nav_hops = None
         if self.hubs.n <= self.gcfg.flat_score_max:
             from repro.kernels import ops
 
@@ -212,9 +239,19 @@ class GateIndex:
                 hub_local = jnp.argmax(scores, axis=1)[:, None]
             else:
                 _, hub_local = jax.lax.top_k(scores, w)
+            if instrument:
+                nav_hops = jnp.zeros((hub_local.shape[0],), jnp.int32)
         else:
-            hub_local = ng.descend(dev["nav"], z_q, probe_width=w)
-        return dev["hub_ids"][hub_local]
+            if instrument:
+                hub_local, nav_hops = ng.descend(
+                    dev["nav"], z_q, probe_width=w, instrument=True
+                )
+            else:
+                hub_local = ng.descend(dev["nav"], z_q, probe_width=w)
+        entries = dev["hub_ids"][hub_local]
+        if instrument:
+            return entries, nav_hops
+        return entries
 
     def search(
         self,
@@ -223,13 +260,32 @@ class GateIndex:
         *,
         beam_width: int = 64,
         max_hops: int = 256,
-    ) -> SearchResult:
+        visited_ring: int = 512,
+        instrument: bool = False,
+    ):
+        """GATE search.  Returns ``SearchResult``; with ``instrument=True``
+        returns ``(SearchResult, SearchTelemetry)``, records the batch into
+        the default metrics registry (``search.*`` instruments) and warns if
+        the visited ring overflowed (nodes silently re-scored)."""
         dev = self._device()
-        entries = self.select_entries(queries)
-        return batched_search(
-            dev["db"], dev["neighbors"], jnp.asarray(queries), entries,
-            beam_width=beam_width, max_hops=max_hops, k=k,
-        )
+        if not instrument:
+            entries = self.select_entries(queries)
+            return batched_search(
+                dev["db"], dev["neighbors"], jnp.asarray(queries), entries,
+                beam_width=beam_width, max_hops=max_hops, k=k,
+                visited_ring=visited_ring,
+            )
+        with span("gate.search", queries=len(queries), beam_width=beam_width):
+            entries, nav_hops = self.select_entries(queries, instrument=True)
+            res, tele = batched_search(
+                dev["db"], dev["neighbors"], jnp.asarray(queries), entries,
+                beam_width=beam_width, max_hops=max_hops, k=k,
+                visited_ring=visited_ring, instrument=True,
+            )
+        tele = tele._replace(nav_hops=nav_hops)
+        record_search_telemetry(tele)
+        warn_on_ring_overflow(tele, visited_ring, where="GateIndex.search")
+        return res, tele
 
     def search_baseline(
         self,
@@ -238,8 +294,10 @@ class GateIndex:
         *,
         beam_width: int = 64,
         max_hops: int = 256,
+        visited_ring: int = 512,
         entry: str = "medoid",
-    ) -> SearchResult:
+        instrument: bool = False,
+    ):
         """Underlying-index search without GATE (entry ∈ {medoid, random})."""
         dev = self._device()
         B = len(queries)
@@ -252,10 +310,19 @@ class GateIndex:
             )
         else:
             raise ValueError(entry)
-        return batched_search(
+        out = batched_search(
             dev["db"], dev["neighbors"], jnp.asarray(queries), entries,
             beam_width=beam_width, max_hops=max_hops, k=k,
+            visited_ring=visited_ring, instrument=instrument,
         )
+        if instrument:
+            res, tele = out
+            record_search_telemetry(tele, prefix=f"search_baseline.{entry}")
+            warn_on_ring_overflow(
+                tele, visited_ring, where=f"search_baseline({entry})"
+            )
+            return res, tele
+        return out
 
     # ------------------------------------------------------------ persistence
     def save(self, path: str):

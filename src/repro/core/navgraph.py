@@ -37,11 +37,16 @@ def descend(
     *,
     max_hops: int = 16,
     probe_width: int = 1,
+    instrument: bool = False,
 ) -> jax.Array:
     """Greedy cosine walk per query → hub-local entry id(s) (B, probe_width).
 
     probe_width > 1 returns the best hubs along the walk (beam-1 search with
     a top-w trace), letting the base search start from several entries.
+
+    ``instrument=True`` additionally returns the per-query descent length
+    (B,) — the nav-graph half of the search path (obs.SearchTelemetry
+    ``nav_hops``).
     """
     reps, nbrs = nav.reps, nav.neighbors
     n_c, s = nbrs.shape
@@ -75,14 +80,17 @@ def descend(
 
         st = (jnp.asarray(start, jnp.int32), c0, jnp.zeros((), bool),
               jnp.zeros((), jnp.int32), trace_ids, trace_sim)
-        cur, cur_s, _, _, ti, ts = jax.lax.while_loop(cond, step, st)
+        cur, cur_s, _, h, ti, ts = jax.lax.while_loop(cond, step, st)
         if probe_width == 1:
-            return cur[None]
+            return cur[None], h
         order = jnp.argsort(-ts)[:probe_width]
         picked = ti[order]
-        return jnp.where(picked < 0, cur, picked)
+        return jnp.where(picked < 0, cur, picked), h
 
-    return jax.vmap(one)(z_q)
+    ids, hops = jax.vmap(one)(z_q)
+    if instrument:
+        return ids, hops
+    return ids
 
 
 @dataclass

@@ -13,6 +13,13 @@ row (R,), mask already-seen ids (beam + visited ring), compute distances
 every beam slot is expanded (the Algorithm-1 condition) or at max_hops.
 
 Distances are squared L2 (monotone-equivalent to L2).
+
+Telemetry (``instrument=True``, a static arg): the loops additionally
+accumulate a ``SearchTelemetry`` pytree — visited-ring evictions (silent
+aliasing signal), beam-convergence hop, entry quality — on device, so
+instrumentation costs one transfer per batch.  ``instrument=False`` (the
+default) traces the exact pre-telemetry program: no extra loop state, no
+telemetry ops in the HLO.
 """
 from __future__ import annotations
 
@@ -22,6 +29,8 @@ from typing import NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.obs.telemetry import SearchTelemetry
 
 INF = jnp.float32(3.4e38)
 
@@ -52,7 +61,14 @@ def beam_search_single(
     beam_width: int,
     max_hops: int,
     visited_ring: int = 512,
-) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    instrument: bool = False,
+    conv_k: int = 10,
+):
+    """One query's Algorithm-1 beam search.
+
+    Returns ``(beam_ids, beam_d, hops, evals)``; with ``instrument=True`` a
+    fifth element — a scalar-leaf ``SearchTelemetry`` — is appended.
+    """
     L = beam_width
     R = neighbors.shape[1]
     qf = q.astype(jnp.float32)
@@ -75,20 +91,60 @@ def beam_search_single(
     hops = jnp.zeros((), jnp.int32)
     evals = jnp.asarray(entry_ids.shape[0], jnp.int32)
 
-    def cond(state):
-        beam_ids, beam_d, expanded, ring, hops, evals = state
-        frontier = (~expanded) & (beam_ids >= 0)
-        return jnp.any(frontier) & (hops < max_hops)
+    if not instrument:
+        def cond(state):
+            beam_ids, beam_d, expanded, ring, hops, evals = state
+            frontier = (~expanded) & (beam_ids >= 0)
+            return jnp.any(frontier) & (hops < max_hops)
 
-    def step(state):
-        beam_ids, beam_d, expanded, ring, hops, evals = state
+        def step(state):
+            beam_ids, beam_d, expanded, ring, hops, evals = state
+            masked = jnp.where(expanded | (beam_ids < 0), INF, beam_d)
+            j = jnp.argmin(masked)
+            p = beam_ids[j]
+            expanded = expanded.at[j].set(True)
+            ring = ring.at[hops % visited_ring].set(p)
+            nbrs = neighbors[jnp.maximum(p, 0)]  # (R,)
+            # dedup against beam + visited ring
+            seen_beam = jnp.any(nbrs[:, None] == beam_ids[None, :], axis=1)
+            seen_ring = jnp.any(nbrs[:, None] == ring[None, :], axis=1)
+            valid = (nbrs >= 0) & ~seen_beam & ~seen_ring
+            d_n = dist_to(jnp.where(valid, nbrs, -1))
+            evals = evals + jnp.sum(valid.astype(jnp.int32))
+            beam_ids, beam_d, expanded = _merge_top_l(
+                beam_ids, beam_d, expanded, jnp.where(valid, nbrs, -1), d_n
+            )
+            return beam_ids, beam_d, expanded, ring, hops + 1, evals
+
+        state = (beam_ids, beam_d, expanded, ring, hops, evals)
+        beam_ids, beam_d, expanded, ring, hops, evals = jax.lax.while_loop(
+            cond, step, state
+        )
+        return beam_ids, beam_d, hops, evals
+
+    # ---------------------------------------------------- instrumented loop
+    K = min(conv_k, L)
+    entry_dist = jnp.min(e_d)
+    evictions = jnp.zeros((), jnp.int32)
+    conv_hop = jnp.zeros((), jnp.int32)
+    prev_topk = beam_ids[:K]
+
+    def cond_i(state):
+        frontier = (~state[2]) & (state[0] >= 0)
+        return jnp.any(frontier) & (state[4] < max_hops)
+
+    def step_i(state):
+        (beam_ids, beam_d, expanded, ring, hops, evals,
+         evictions, conv_hop, prev_topk) = state
         masked = jnp.where(expanded | (beam_ids < 0), INF, beam_d)
         j = jnp.argmin(masked)
         p = beam_ids[j]
         expanded = expanded.at[j].set(True)
-        ring = ring.at[hops % visited_ring].set(p)
+        slot = hops % visited_ring
+        # a live id overwritten = node can silently be re-scored later
+        evictions = evictions + (ring[slot] >= 0).astype(jnp.int32)
+        ring = ring.at[slot].set(p)
         nbrs = neighbors[jnp.maximum(p, 0)]  # (R,)
-        # dedup against beam + visited ring
         seen_beam = jnp.any(nbrs[:, None] == beam_ids[None, :], axis=1)
         seen_ring = jnp.any(nbrs[:, None] == ring[None, :], axis=1)
         valid = (nbrs >= 0) & ~seen_beam & ~seen_ring
@@ -97,18 +153,35 @@ def beam_search_single(
         beam_ids, beam_d, expanded = _merge_top_l(
             beam_ids, beam_d, expanded, jnp.where(valid, nbrs, -1), d_n
         )
-        return beam_ids, beam_d, expanded, ring, hops + 1, evals
+        topk = beam_ids[:K]
+        changed = jnp.any(topk != prev_topk)
+        conv_hop = jnp.where(changed, hops + 1, conv_hop)
+        return (beam_ids, beam_d, expanded, ring, hops + 1, evals,
+                evictions, conv_hop, topk)
 
-    state = (beam_ids, beam_d, expanded, ring, hops, evals)
-    beam_ids, beam_d, expanded, ring, hops, evals = jax.lax.while_loop(
-        cond, step, state
+    state = (beam_ids, beam_d, expanded, ring, hops, evals,
+             evictions, conv_hop, prev_topk)
+    (beam_ids, beam_d, expanded, ring, hops, evals,
+     evictions, conv_hop, prev_topk) = jax.lax.while_loop(
+        cond_i, step_i, state
     )
-    return beam_ids, beam_d, hops, evals
+    tele = SearchTelemetry(
+        hops=hops,
+        dist_evals=evals,
+        ring_evictions=evictions,
+        converged_hop=conv_hop,
+        nav_hops=jnp.zeros((), jnp.int32),
+        entry_dist=entry_dist,
+        entry_rank_proxy=entry_dist / jnp.maximum(beam_d[0], 1e-12),
+    )
+    return beam_ids, beam_d, hops, evals, tele
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("beam_width", "max_hops", "k", "visited_ring"),
+    static_argnames=(
+        "beam_width", "max_hops", "k", "visited_ring", "instrument", "conv_k",
+    ),
 )
 def batched_search(
     db: jax.Array,
@@ -120,7 +193,15 @@ def batched_search(
     max_hops: int = 256,
     k: int = 10,
     visited_ring: int = 512,
-) -> SearchResult:
+    instrument: bool = False,
+    conv_k: int = 10,
+):
+    """Batched Algorithm-1 search.
+
+    ``instrument=False`` (default): returns ``SearchResult`` — the HLO is
+    identical to the pre-telemetry program.  ``instrument=True``: returns
+    ``(SearchResult, SearchTelemetry)`` with (B,) telemetry leaves.
+    """
     fn = functools.partial(
         beam_search_single,
         db,
@@ -128,9 +209,14 @@ def batched_search(
         beam_width=beam_width,
         max_hops=max_hops,
         visited_ring=visited_ring,
+        instrument=instrument,
+        conv_k=conv_k,
     )
-    beam_ids, beam_d, hops, evals = jax.vmap(fn)(queries, entry_ids)
-    return SearchResult(beam_ids[:, :k], beam_d[:, :k], hops, evals)
+    if not instrument:
+        beam_ids, beam_d, hops, evals = jax.vmap(fn)(queries, entry_ids)
+        return SearchResult(beam_ids[:, :k], beam_d[:, :k], hops, evals)
+    beam_ids, beam_d, hops, evals, tele = jax.vmap(fn)(queries, entry_ids)
+    return SearchResult(beam_ids[:, :k], beam_d[:, :k], hops, evals), tele
 
 
 def beam_search_fixed(
@@ -144,7 +230,9 @@ def beam_search_fixed(
     visited_ring: int = 256,
     expand_width: int = 1,
     db_norms: Optional[jax.Array] = None,
-) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    instrument: bool = False,
+    conv_k: int = 10,
+):
     """Fixed-trip-count variant (lax.scan over hops) for batch serving:
     every query runs exactly ``num_hops`` expansions in lockstep — the TPU
     deployment mode (static latency, static HLO trip counts for roofline).
@@ -161,6 +249,9 @@ def beam_search_fixed(
     gathered vectors in their storage dtype end-to-end — without it XLA
     hoists a fp32 convert of the ENTIRE db shard out of the hop loop
     (measured +2.1 GiB footprint and +4.3 GB traffic on search_1b).
+
+    Returns ``(beam_ids, beam_d, hops)``; ``instrument=True`` appends a
+    scalar-leaf ``SearchTelemetry`` carried through the scan.
     """
     L = beam_width
     E = expand_width
@@ -188,13 +279,15 @@ def beam_search_fixed(
     )[:L]
     beam_d = jnp.concatenate([e_d, jnp.full((max(pad, 0),), INF)])[:L]
     order = jnp.argsort(beam_d)
-    state = (
-        beam_ids[order], beam_d[order], jnp.zeros((L,), jnp.bool_),
-        jnp.full((visited_ring,), -1, jnp.int32),
-    )
+    beam_ids, beam_d = beam_ids[order], beam_d[order]
+    expanded0 = jnp.zeros((L,), jnp.bool_)
+    ring0 = jnp.full((visited_ring,), -1, jnp.int32)
 
-    def step(state, h):
-        beam_ids, beam_d, expanded, ring = state
+    def expand(beam_ids, beam_d, expanded, ring, h, count=False):
+        """Shared hop body → new beam state + (#valid, #ring evictions).
+
+        ``count=False`` traces no telemetry ops (the eviction slice is only
+        read in the instrumented scan)."""
         masked = jnp.where(expanded | (beam_ids < 0), INF, beam_d)
         if E == 1:
             j = jnp.argmin(masked)[None]
@@ -202,9 +295,10 @@ def beam_search_fixed(
             _, j = jax.lax.top_k(-masked, E)   # E best unexpanded
         p = beam_ids[j]                         # (E,)
         expanded = expanded.at[j].set(True)
-        ring = jax.lax.dynamic_update_slice(
-            ring, p, ((h * E) % visited_ring,)
-        )
+        start = ((h * E) % visited_ring,)
+        if count:
+            old = jax.lax.dynamic_slice(ring, start, (E,))
+        ring = jax.lax.dynamic_update_slice(ring, p, start)
         nbrs = neighbors[jnp.maximum(p, 0)].reshape(-1)  # (E*R,)
         seen_beam = jnp.any(nbrs[:, None] == beam_ids[None, :], axis=1)
         seen_ring = jnp.any(nbrs[:, None] == ring[None, :], axis=1)
@@ -218,15 +312,64 @@ def beam_search_fixed(
             & (p.repeat(neighbors.shape[1]) >= 0)
         )
         d_n = dist_to(jnp.where(valid, nbrs, -1))
+        if count:
+            n_valid = jnp.sum(valid.astype(jnp.int32))
+            n_evict = jnp.sum((old >= 0).astype(jnp.int32))
+        else:
+            n_valid = n_evict = jnp.zeros((), jnp.int32)
         beam_ids, beam_d, expanded = _merge_top_l(
             beam_ids, beam_d, expanded, jnp.where(valid, nbrs, -1), d_n
         )
-        return (beam_ids, beam_d, expanded, ring), None
+        return beam_ids, beam_d, expanded, ring, n_valid, n_evict
 
-    (beam_ids, beam_d, _, _), _ = jax.lax.scan(
-        step, state, jnp.arange(num_hops)
+    if not instrument:
+        def step(state, h):
+            beam_ids, beam_d, expanded, ring = state
+            beam_ids, beam_d, expanded, ring, _, _ = expand(
+                beam_ids, beam_d, expanded, ring, h
+            )
+            return (beam_ids, beam_d, expanded, ring), None
+
+        (beam_ids, beam_d, _, _), _ = jax.lax.scan(
+            step, (beam_ids, beam_d, expanded0, ring0), jnp.arange(num_hops)
+        )
+        return beam_ids, beam_d, jnp.asarray(num_hops * E, jnp.int32)
+
+    K = min(conv_k, L)
+    entry_dist = jnp.min(e_d)
+
+    def step_i(state, h):
+        beam_ids, beam_d, expanded, ring, evals, evictions, conv_hop, prev = state
+        beam_ids, beam_d, expanded, ring, n_valid, n_evict = expand(
+            beam_ids, beam_d, expanded, ring, h, count=True
+        )
+        topk = beam_ids[:K]
+        changed = jnp.any(topk != prev)
+        conv_hop = jnp.where(changed, h + 1, conv_hop)
+        return (
+            beam_ids, beam_d, expanded, ring,
+            evals + n_valid, evictions + n_evict, conv_hop, topk,
+        ), None
+
+    state0 = (
+        beam_ids, beam_d, expanded0, ring0,
+        jnp.asarray(entry_ids.shape[0], jnp.int32),
+        jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32), beam_ids[:K],
     )
-    return beam_ids, beam_d, jnp.asarray(num_hops * E, jnp.int32)
+    (beam_ids, beam_d, _, _, evals, evictions, conv_hop, _), _ = jax.lax.scan(
+        step_i, state0, jnp.arange(num_hops)
+    )
+    hops = jnp.asarray(num_hops * E, jnp.int32)
+    tele = SearchTelemetry(
+        hops=hops,
+        dist_evals=evals,
+        ring_evictions=evictions,
+        converged_hop=conv_hop,
+        nav_hops=jnp.zeros((), jnp.int32),
+        entry_dist=entry_dist,
+        entry_rank_proxy=entry_dist / jnp.maximum(beam_d[0], 1e-12),
+    )
+    return beam_ids, beam_d, hops, tele
 
 
 def greedy_descent(
@@ -236,9 +379,12 @@ def greedy_descent(
     start: jax.Array,      # () int32
     max_hops: int = 32,
     metric: str = "l2",
-) -> jax.Array:
+    *,
+    instrument: bool = False,
+):
     """Pure greedy walk to a local minimum (1-best, no beam). Used for the
-    GATE navigation graph where s is tiny. Returns node id."""
+    GATE navigation graph where s is tiny. Returns node id; with
+    ``instrument=True`` returns ``(node id, hops taken)``."""
     qf = q.astype(jnp.float32)
 
     if metric == "l2":
@@ -277,7 +423,9 @@ def greedy_descent(
         )
 
     d0 = dist(start[None])[0]
-    cur, _, _, _ = jax.lax.while_loop(
+    cur, _, _, h = jax.lax.while_loop(
         cond, step, (start, d0, jnp.zeros((), jnp.bool_), jnp.zeros((), jnp.int32))
     )
+    if instrument:
+        return cur, h
     return cur

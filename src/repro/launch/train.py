@@ -20,7 +20,8 @@ from repro.configs.base import ShapeSpec
 from repro.data.pipeline import DataConfig, TokenPipeline
 from repro.distributed.fault import FaultTolerantRunner, RunnerConfig
 from repro.models.model import build_model, make_inputs
-from repro.train.loop import make_train_state, make_train_step
+from repro.obs import get_tracer
+from repro.train.loop import instrument_step, make_train_state, make_train_step
 from repro.train.optim import adamw
 
 
@@ -37,16 +38,20 @@ def main():
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a chrome://tracing JSONL of train steps")
     args = ap.parse_args()
+    if args.trace:
+        get_tracer().start(args.trace)
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     model = build_model(cfg)
     optim = adamw(lr=args.lr, warmup=min(50, args.steps // 10 + 1),
                   total_steps=args.steps)
-    step_fn = jax.jit(
+    step_fn = instrument_step(jax.jit(
         make_train_step(model, optim, num_microbatches=args.micro),
         donate_argnums=(0,),
-    )
+    ))
     pipe = TokenPipeline(
         DataConfig(cfg.vocab_size, args.seq, args.batch, seed=args.seed)
     )
@@ -99,6 +104,9 @@ def main():
         f"done: {args.steps} steps in {dt:.1f}s "
         f"({args.steps / dt:.2f} it/s); loss {losses[0]:.3f} -> {losses[-1]:.3f}"
     )
+    if args.trace:
+        get_tracer().stop()
+        print(f"trace -> {args.trace} (open in chrome://tracing)")
 
 
 if __name__ == "__main__":

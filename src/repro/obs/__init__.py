@@ -1,0 +1,49 @@
+"""repro.obs — end-to-end search/serve/train observability (ISSUE 6).
+
+Three parts:
+  registry   — counters / gauges / fixed-bucket histograms; JSON +
+               Prometheus-text export (``get_registry()``)
+  trace      — host-side ``span()`` / ``@traced`` → chrome://tracing JSONL
+               (``get_tracer()``)
+  telemetry  — ``SearchTelemetry`` pytree accumulated inside the jitted
+               search loops + host-side recording/warnings
+
+See docs/observability.md.
+"""
+from repro.obs.registry import (
+    Counter,
+    Gauge,
+    Histogram,
+    LATENCY_BUCKETS,
+    MetricsRegistry,
+    POW2_BUCKETS,
+    get_registry,
+)
+from repro.obs.telemetry import (
+    RATIO_BUCKETS,
+    SearchTelemetry,
+    record_search_telemetry,
+    summarize,
+    warn_on_ring_overflow,
+)
+from repro.obs.trace import Tracer, get_tracer, read_trace, span, traced
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "LATENCY_BUCKETS",
+    "MetricsRegistry",
+    "POW2_BUCKETS",
+    "RATIO_BUCKETS",
+    "SearchTelemetry",
+    "Tracer",
+    "get_registry",
+    "get_tracer",
+    "read_trace",
+    "record_search_telemetry",
+    "span",
+    "summarize",
+    "traced",
+    "warn_on_ring_overflow",
+]

@@ -1,0 +1,119 @@
+"""Device-side search telemetry: the pytree the jitted search loops return
+(one leaf per signal, one host transfer per batch) plus the host-side
+consumers — registry recording, ring-overflow warning, summaries.
+
+Field ↔ paper mapping (PAPER.md §5, arXiv:2402.04713, arXiv:2510.22316):
+  hops              search path length ℓ (Algorithm-1 expansion count)
+  dist_evals        #distance computations (the paper's cost unit)
+  ring_evictions    visited-ring slots overwritten while still holding a
+                    live id — each one re-opens a node for re-scoring
+                    (silent aliasing; satellite fix in ISSUE 6)
+  converged_hop     first hop after which the top-k beam prefix never
+                    changed again (beam convergence; adaptive-termination
+                    signal of Hua et al.)
+  nav_hops          navigation-graph greedy-descent length (GATE entry)
+  entry_dist        best entry candidate's distance to the query
+  entry_rank_proxy  entry_dist / final top-1 distance — 1.0 means the
+                    chosen entry already was the answer; large values mean
+                    a poor entry (entry-quality proxy without ground truth)
+"""
+from __future__ import annotations
+
+import warnings
+from typing import NamedTuple
+
+import jax
+import numpy as np
+
+from repro.obs.registry import MetricsRegistry, POW2_BUCKETS, get_registry
+
+
+class SearchTelemetry(NamedTuple):
+    """Per-query counters accumulated inside the jitted search loops.
+
+    All leaves are shape (B,); a NamedTuple so it crosses jit/vmap as a
+    pytree and transfers to host as one batch.
+    """
+
+    hops: jax.Array             # int32  — expansions (path length ℓ)
+    dist_evals: jax.Array       # int32  — distance computations
+    ring_evictions: jax.Array   # int32  — live visited-ring slots overwritten
+    converged_hop: jax.Array    # int32  — last hop the top-k prefix changed
+    nav_hops: jax.Array         # int32  — nav-graph descent length (0 if n/a)
+    entry_dist: jax.Array       # float32 — best entry distance to query
+    entry_rank_proxy: jax.Array # float32 — entry_dist / final top-1 dist
+
+
+# Ratio buckets for entry_rank_proxy: 1.0 = perfect entry.
+RATIO_BUCKETS = (1.0, 1.5, 2.0, 3.0, 5.0, 8.0, 16.0, 32.0, 64.0, 128.0,
+                 256.0, 1024.0)
+
+
+def summarize(tele: SearchTelemetry) -> dict:
+    """Host-side scalar summary (means) of a telemetry batch."""
+    t = jax.tree.map(np.asarray, tele)
+    overflow = int((t.ring_evictions > 0).sum())
+    return {
+        "queries": int(t.hops.shape[0]),
+        "mean_hops": float(t.hops.mean()),
+        "mean_dist_evals": float(t.dist_evals.mean()),
+        "mean_converged_hop": float(t.converged_hop.mean()),
+        "mean_nav_hops": float(t.nav_hops.mean()),
+        "mean_entry_dist": float(t.entry_dist.mean()),
+        "mean_entry_rank_proxy": float(t.entry_rank_proxy.mean()),
+        "ring_evictions_total": int(t.ring_evictions.sum()),
+        "ring_overflow_queries": overflow,
+    }
+
+
+def record_search_telemetry(
+    tele: SearchTelemetry,
+    registry: MetricsRegistry = None,
+    prefix: str = "search",
+) -> None:
+    """Fold a telemetry batch into registry histograms/counters."""
+    reg = registry if registry is not None else get_registry()
+    if not reg.enabled:
+        return
+    t = jax.tree.map(np.asarray, tele)
+    reg.counter(f"{prefix}.queries", "queries searched").inc(t.hops.shape[0])
+    reg.histogram(
+        f"{prefix}.hops", "search path length (hops)", POW2_BUCKETS
+    ).observe_many(t.hops)
+    reg.histogram(
+        f"{prefix}.dist_evals", "distance evaluations per query", POW2_BUCKETS
+    ).observe_many(t.dist_evals)
+    reg.histogram(
+        f"{prefix}.converged_hop", "hop at which top-k prefix stabilized",
+        POW2_BUCKETS,
+    ).observe_many(t.converged_hop)
+    reg.histogram(
+        f"{prefix}.nav_hops", "nav-graph descent length", POW2_BUCKETS
+    ).observe_many(t.nav_hops)
+    reg.histogram(
+        f"{prefix}.entry_rank_proxy",
+        "entry distance / final top-1 distance", RATIO_BUCKETS,
+    ).observe_many(t.entry_rank_proxy)
+    reg.counter(
+        f"{prefix}.ring_evictions", "visited-ring live-slot evictions"
+    ).inc(int(t.ring_evictions.sum()))
+
+
+def warn_on_ring_overflow(
+    tele: SearchTelemetry, visited_ring: int, where: str = "search"
+) -> int:
+    """Host-side warning for the visited-ring aliasing satellite: when total
+    expansions exceed the ring capacity, old entries are evicted and their
+    nodes can silently be re-scored (wasted dist-evals, inflated recall
+    variance).  Returns the number of affected queries."""
+    ev = np.asarray(tele.ring_evictions)
+    n = int((ev > 0).sum())
+    if n:
+        warnings.warn(
+            f"[{where}] visited-ring overflow on {n}/{ev.shape[0]} queries "
+            f"({int(ev.sum())} evictions, ring={visited_ring}): nodes may be "
+            f"re-scored; raise visited_ring or lower max_hops/beam_width",
+            RuntimeWarning,
+            stacklevel=3,
+        )
+    return n

@@ -3,11 +3,16 @@
 One jit'd prefill and one jit'd decode step per (arch, batch, cache_len);
 decode loops on host (matches the serve_step unit the dry-run lowers).
 Greedy or temperature sampling; per-request stop handling via done mask.
+
+Observability: ``generate`` wraps the prefill and the decode loop in
+``obs.span``s (prefill/decode split in the chrome trace) and reports
+requests / generated tokens / tokens-per-second into the default metrics
+registry.  Both cost one branch each when tracing/metrics are disabled.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
-from functools import partial
 from typing import Dict, Optional
 
 import jax
@@ -17,11 +22,24 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.distributed.sharding import NULL_CTX, ShardingCtx
 from repro.models.model import build_model
+from repro.obs import LATENCY_BUCKETS, get_registry, get_tracer, span
 
 
 @dataclass
 class GenerationResult:
-    tokens: np.ndarray      # (B, max_new) generated ids
+    """Shape contract (identical whether or not EOS fired early):
+
+      tokens       (B, steps) — ``steps`` decode steps were executed for the
+                   whole batch; requests that hit EOS before step ``steps``
+                   are right-padded with 0 from the step after their EOS.
+      logits_last  (B, vocab) — logits produced by the final decode step
+                   (the distribution over the hypothetical next token), on
+                   every path.
+      steps        number of decode steps executed, ``1 ≤ steps ≤ max_new``;
+                   < max_new only when every request hit EOS early.
+    """
+
+    tokens: np.ndarray      # (B, steps) generated ids
     logits_last: np.ndarray
     steps: int
 
@@ -52,27 +70,56 @@ class ServeEngine:
         seed: int = 0,
     ) -> GenerationResult:
         prompt_len = batch["tokens"].shape[1]
-        logits, cache = self._prefill(
-            self.params, batch, prompt_len + max_new_tokens
-        )
-        B = logits.shape[0]
+        B = batch["tokens"].shape[0]
+        t_start = time.perf_counter()
+        with span("serve.prefill", batch=B, prompt_len=prompt_len):
+            logits, cache = self._prefill(
+                self.params, batch, prompt_len + max_new_tokens
+            )
+            if get_tracer().enabled:  # sync only when the span is real
+                logits.block_until_ready()
+        t_prefill = time.perf_counter() - t_start
         t = jnp.full((B,), prompt_len, jnp.int32)
         key = jax.random.PRNGKey(seed)
         done = np.zeros(B, bool)
         out = np.zeros((B, max_new_tokens), np.int32)
-        for i in range(max_new_tokens):
-            if temperature > 0:
-                key, sk = jax.random.split(key)
-                tok = jax.random.categorical(sk, logits / temperature, axis=-1)
-            else:
-                tok = jnp.argmax(logits, axis=-1)
-            tok_np = np.asarray(tok, np.int32)
-            out[:, i] = np.where(done, 0, tok_np)
-            if eos_id is not None:
-                done |= tok_np == eos_id
+        steps = 0
+        t0 = time.perf_counter()
+        with span("serve.decode", batch=B, max_new=max_new_tokens):
+            for i in range(max_new_tokens):
+                if temperature > 0:
+                    key, sk = jax.random.split(key)
+                    tok = jax.random.categorical(
+                        sk, logits / temperature, axis=-1
+                    )
+                else:
+                    tok = jnp.argmax(logits, axis=-1)
+                tok_np = np.asarray(tok, np.int32)
+                out[:, i] = np.where(done, 0, tok_np)
+                if eos_id is not None:
+                    done |= tok_np == eos_id
+                # the final decode always runs so logits_last is the
+                # post-last-token distribution on every path (see contract)
+                logits, cache = self._decode(
+                    self.params, tok[:, None].astype(jnp.int32), cache, t + i
+                )
+                steps = i + 1
                 if done.all():
-                    return GenerationResult(out[:, : i + 1], np.asarray(logits), i + 1)
-            logits, cache = self._decode(
-                self.params, tok[:, None].astype(jnp.int32), cache, t + i
-            )
-        return GenerationResult(out, np.asarray(logits), max_new_tokens)
+                    break
+        dt = time.perf_counter() - t0
+        n_tok = int(B * steps)
+        reg = get_registry()
+        if reg.enabled:
+            reg.counter("serve.requests", "generate() requests").inc(B)
+            reg.counter("serve.tokens", "decoded tokens").inc(n_tok)
+            reg.histogram(
+                "serve.prefill_seconds", "prefill latency", LATENCY_BUCKETS
+            ).observe(t_prefill)
+            reg.histogram(
+                "serve.decode_seconds", "decode-loop latency", LATENCY_BUCKETS
+            ).observe(dt)
+            if dt > 0:
+                reg.gauge(
+                    "serve.tokens_per_sec", "decode throughput (last batch)"
+                ).set(n_tok / dt)
+        return GenerationResult(out[:, :steps], np.asarray(logits), steps)

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.gate_index import GateIndex
+from repro.obs import SearchTelemetry, span
 from repro.serve.engine import GenerationResult, ServeEngine
 
 
@@ -23,6 +24,8 @@ from repro.serve.engine import GenerationResult, ServeEngine
 class RagResult:
     retrieved_ids: np.ndarray  # (B, k) database ids
     generation: GenerationResult
+    # per-query search telemetry when the pipeline runs instrumented
+    telemetry: Optional[SearchTelemetry] = None
 
 
 class RagPipeline:
@@ -34,12 +37,14 @@ class RagPipeline:
         *,
         k: int = 4,
         beam_width: int = 64,
+        instrument: bool = False,
     ):
         self.index = index
         self.engine = engine
         self.doc_tokens = doc_tokens
         self.k = k
         self.beam_width = beam_width
+        self.instrument = instrument
 
     def _splice(self, prompt_tokens: np.ndarray, ids: np.ndarray) -> np.ndarray:
         """[doc_0 ‖ … ‖ doc_{k-1} ‖ prompt] per request."""
@@ -55,12 +60,23 @@ class RagPipeline:
         max_new_tokens: int = 32,
         **gen_kw,
     ) -> RagResult:
-        res = self.index.search(
-            query_vecs, k=self.k, beam_width=self.beam_width
-        )
-        ids = np.asarray(res.ids)
+        tele = None
+        with span("rag.retrieve", batch=len(query_vecs), k=self.k,
+                  beam_width=self.beam_width):
+            if self.instrument:
+                res, tele = self.index.search(
+                    query_vecs, k=self.k, beam_width=self.beam_width,
+                    instrument=True,
+                )
+            else:
+                res = self.index.search(
+                    query_vecs, k=self.k, beam_width=self.beam_width
+                )
+            ids = np.asarray(res.ids)
         tokens = self._splice(prompt_tokens, ids)
-        gen = self.engine.generate(
-            {"tokens": jnp.asarray(tokens)}, max_new_tokens, **gen_kw
-        )
-        return RagResult(retrieved_ids=ids, generation=gen)
+        with span("rag.generate", batch=len(query_vecs),
+                  max_new=max_new_tokens):
+            gen = self.engine.generate(
+                {"tokens": jnp.asarray(tokens)}, max_new_tokens, **gen_kw
+            )
+        return RagResult(retrieved_ids=ids, generation=gen, telemetry=tele)

@@ -6,12 +6,14 @@ accumulating fp32 grads — the standard memory lever for the big train cells
 """
 from __future__ import annotations
 
+import time
 from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.distributed.sharding import NULL_CTX, ShardingCtx
+from repro.obs import LATENCY_BUCKETS, get_registry, get_tracer
 from repro.train.optim import Optimizer
 
 
@@ -93,3 +95,43 @@ def make_train_step(
         return {"params": new_params, "opt": new_opt}, out_metrics
 
     return train_step
+
+
+def instrument_step(step_fn, *, name: str = "train.step"):
+    """Wrap a (possibly jitted) train step with a host-side span + registry
+    metrics (step latency histogram, steps counter, loss/grad-norm gauges).
+
+    The span/timing forces a sync on the returned metrics — which every
+    driver fetches right after anyway — so the measured duration is the real
+    device step, not dispatch time.  With both the tracer and the registry
+    disabled the wrapper adds one branch per step.
+    """
+    tracer = get_tracer()
+
+    def wrapped(state, batch):
+        reg = get_registry()
+        if not (tracer.enabled or reg.enabled):
+            return step_fn(state, batch)
+        t0 = time.perf_counter()
+        ts = tracer._now_us() if tracer.enabled else 0.0
+        state, metrics = step_fn(state, batch)
+        jax.block_until_ready(metrics)
+        dt = time.perf_counter() - t0
+        if tracer.enabled:
+            tracer.complete_event(name, ts, dt * 1e6)
+        if reg.enabled:
+            reg.counter("train.steps", "optimizer steps").inc()
+            reg.histogram(
+                "train.step_seconds", "train step latency", LATENCY_BUCKETS
+            ).observe(dt)
+            if "loss" in metrics:
+                reg.gauge("train.loss", "last step loss").set(
+                    float(metrics["loss"])
+                )
+            if "grad_norm" in metrics:
+                reg.gauge("train.grad_norm", "last step grad norm").set(
+                    float(metrics["grad_norm"])
+                )
+        return state, metrics
+
+    return wrapped

@@ -1,0 +1,59 @@
+"""Degraded stand-in for ``hypothesis`` when it isn't installed.
+
+The CI container ships without hypothesis (and nothing may be pip-installed),
+which used to kill collection of three test modules at import time.  This
+shim keeps the property tests *running* instead of skipping the whole module:
+``@given`` calls the test with three deterministic examples per strategy
+(low, midpoint, high, zipped across strategies) — far weaker than real
+property search, but it exercises the same code paths.
+
+Only the subset the repo's tests use is implemented (``st.integers``,
+keyword-style ``@given``, ``@settings``).
+"""
+from __future__ import annotations
+
+
+class _IntStrategy:
+    def __init__(self, lo: int, hi: int):
+        self.lo, self.hi = int(lo), int(hi)
+
+    def examples(self):
+        mid = (self.lo + self.hi) // 2
+        # dedupe while preserving order (lo == mid for tiny ranges)
+        seen, out = set(), []
+        for v in (self.lo, mid, self.hi):
+            if v not in seen:
+                seen.add(v)
+                out.append(v)
+        return out
+
+
+class st:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _IntStrategy:
+        return _IntStrategy(min_value, max_value)
+
+
+def settings(*_a, **_k):
+    return lambda fn: fn
+
+
+def given(**strategies):
+    def deco(fn):
+        names = list(strategies)
+        columns = [strategies[n].examples() for n in names]
+        n_runs = max(len(c) for c in columns)
+
+        # no functools.wraps: pytest must NOT see the strategy parameters in
+        # the signature (it would resolve them as fixtures)
+        def wrapped():
+            for i in range(n_runs):
+                ex = {n: c[min(i, len(c) - 1)] for n, c in zip(names, columns)}
+                fn(**ex)
+
+        wrapped.__name__ = fn.__name__
+        wrapped.__doc__ = fn.__doc__
+        wrapped.__module__ = fn.__module__
+        return wrapped
+
+    return deco

@@ -3,7 +3,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.samples import hop_counts, make_samples, top1_targets
 from repro.core.subgraph import sample_all_subgraphs, sample_subgraph

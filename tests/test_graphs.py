@@ -108,6 +108,85 @@ def test_greedy_descent_reaches_local_min():
         assert d_out <= ((vecs[v] - np.asarray(q)) ** 2).sum() + 1e-5
 
 
+def test_greedy_descent_cosine_reaches_local_min():
+    rng = np.random.default_rng(5)
+    vecs = rng.standard_normal((64, 8)).astype(np.float32)
+    g = knn_graph(vecs, 4)
+    q = jnp.asarray(vecs[23] + 0.01 * rng.standard_normal(8).astype(np.float32))
+    out = greedy_descent(
+        jnp.asarray(vecs), jnp.asarray(g), q, jnp.asarray(0, jnp.int32),
+        max_hops=64, metric="cosine",
+    )
+    qn = np.asarray(q) / np.linalg.norm(np.asarray(q))
+
+    def cos_d(v):
+        return 1.0 - (v / np.linalg.norm(v)) @ qn
+
+    # result must be at least as cosine-close as every neighbor of the result
+    d_out = cos_d(vecs[int(out)])
+    for v in g[int(out)]:
+        assert d_out <= cos_d(vecs[v]) + 1e-5
+
+
+def test_greedy_descent_cosine_finds_scaled_target():
+    """Cosine is scale-invariant: a rescaled db vector must still be found."""
+    rng = np.random.default_rng(6)
+    vecs = rng.standard_normal((128, 16)).astype(np.float32)
+    g = knn_graph(vecs, 6)
+    q = jnp.asarray(5.0 * vecs[40])  # same direction, different norm
+    out = greedy_descent(
+        jnp.asarray(vecs), jnp.asarray(g), q, jnp.asarray(0, jnp.int32),
+        max_hops=128, metric="cosine",
+    )
+    qn = np.asarray(q) / np.linalg.norm(np.asarray(q))
+    d_out = 1.0 - (vecs[int(out)] / np.linalg.norm(vecs[int(out)])) @ qn
+    for v in g[int(out)]:
+        d_v = 1.0 - (vecs[v] / np.linalg.norm(vecs[v])) @ qn
+        assert d_out <= d_v + 1e-5
+
+
+@pytest.mark.parametrize("metric", ["l2", "cosine"])
+def test_greedy_descent_instrument_identical(metric):
+    rng = np.random.default_rng(7)
+    vecs = rng.standard_normal((64, 8)).astype(np.float32)
+    g = knn_graph(vecs, 4)
+    q = jnp.asarray(rng.standard_normal(8).astype(np.float32))
+    start = jnp.asarray(3, jnp.int32)
+    out = greedy_descent(
+        jnp.asarray(vecs), jnp.asarray(g), q, start, max_hops=64,
+        metric=metric,
+    )
+    out_i, hops = greedy_descent(
+        jnp.asarray(vecs), jnp.asarray(g), q, start, max_hops=64,
+        metric=metric, instrument=True,
+    )
+    assert int(out) == int(out_i)
+    assert 0 <= int(hops) <= 64
+
+
+def test_batched_search_instrument_identical_ids_dists(
+    uniform_db, uniform_nsg
+):
+    """instrument=True must not change search results (satellite, ISSUE 6)."""
+    db = uniform_db
+    queries = make_queries_in_dist(db, 32, seed=11)
+    entries = jnp.full((32, 1), uniform_nsg.enter_id, jnp.int32)
+    args = (
+        jnp.asarray(db), jnp.asarray(uniform_nsg.neighbors),
+        jnp.asarray(queries), entries,
+    )
+    kw = dict(beam_width=32, max_hops=128, k=10)
+    res = batched_search(*args, **kw)
+    res_i, tele = batched_search(*args, **kw, instrument=True)
+    np.testing.assert_array_equal(np.asarray(res.ids), np.asarray(res_i.ids))
+    np.testing.assert_array_equal(
+        np.asarray(res.dists), np.asarray(res_i.dists)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(res.hops), np.asarray(tele.hops)
+    )
+
+
 def test_medoid_is_central(small_db):
     db, _ = small_db
     m = medoid(db)

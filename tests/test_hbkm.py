@@ -1,7 +1,11 @@
 """HBKM (Algorithm 2): balance objective, exact leaf counts, hub extraction."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # CI container has no hypothesis; run fixed examples
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core.hbkm import balanced_kmeans, cluster_size_variance, hbkm
 from repro.core.hubs import extract_hubs, kmeans_hubs

@@ -48,6 +48,26 @@ def test_generate_eos_stops(engine):
     assert out.steps <= 4
 
 
+def test_generate_shape_contract_eos_and_plain(engine):
+    """GenerationResult contract (ISSUE 6 satellite): tokens is (B, steps)
+    and logits_last is (B, vocab) on BOTH the early-EOS and full paths."""
+    eng, cfg = engine
+    rng = np.random.default_rng(3)
+    prompts = rng.integers(2, cfg.vocab_size, (2, 8)).astype(np.int32)
+    batch = {"tokens": jnp.asarray(prompts)}
+
+    plain = eng.generate(batch, 5)
+    assert plain.steps == 5
+    assert plain.tokens.shape == (2, plain.steps)
+    assert plain.logits_last.shape == (2, cfg.vocab_size)
+
+    # EOS id taken from the first greedy emission → likely early stop
+    eos = eng.generate(batch, 5, eos_id=int(plain.tokens[0, 0]))
+    assert 1 <= eos.steps <= 5
+    assert eos.tokens.shape == (2, eos.steps)
+    assert eos.logits_last.shape == (2, cfg.vocab_size)
+
+
 def test_rag_pipeline_end_to_end():
     from repro.core import GateConfig, GateIndex
     from repro.data.synthetic import make_database, make_queries_in_dist
