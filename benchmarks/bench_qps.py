@@ -5,10 +5,19 @@ four competitor entry strategies on the same NSG.
 histograms into the metrics section of the JSON artifact and a build-phase
 span trace (chrome://tracing) — QPS numbers are still measured on the
 uninstrumented search program (see benchmarks/common.py).
+
+``--adaptive`` (default on, ISSUE 7) adds an adaptive-vs-fixed section: the
+telemetry-driven ``AdaptiveController`` serves a mixed easy/OOD query stream
+over the precompiled beam ladder, compared against every fixed rung on the
+*same* stream — the payoff metric for the paper's adaptive-awareness loop.
 """
 from __future__ import annotations
 
 import argparse
+import time
+
+import jax
+import numpy as np
 
 from benchmarks.common import (
     entry_strategies,
@@ -17,6 +26,10 @@ from benchmarks.common import (
     save_json,
     setup_observability,
 )
+from repro import obs
+from repro.graphs.knn import exact_knn, recall_at_k
+from repro.obs.adaptive import AdaptiveController, DEFAULT_LADDER
+from repro.obs.window import RollingWindow
 
 PROFILES = {
     "quick": [("sift10m-like", 8000)],
@@ -30,11 +43,15 @@ PROFILES = {
 }
 
 
-def run(mode: str = "quick", seed: int = 0, instrument: bool = True):
+def run(mode: str = "quick", seed: int = 0, instrument: bool = True,
+        adaptive: bool = True):
     setup_observability("qps", trace=instrument)
     results = {}
+    first_workload = None
     for profile, n in PROFILES[mode]:
         w = load_workload(profile, n, seed=seed)
+        if first_workload is None:
+            first_workload = w
         per = {}
         for name, fn in entry_strategies(w).items():
             per[name] = measure_entry_strategy(
@@ -44,9 +61,114 @@ def run(mode: str = "quick", seed: int = 0, instrument: bool = True):
         # headline: speed-up at the highest matched recall@10
         best = _speedup_at_matched_recall(per)
         print(f"[bench_qps] {profile}: {best}")
+    if adaptive and first_workload is not None:
+        results["adaptive_vs_fixed"] = measure_adaptive(
+            first_workload, seed=seed
+        )
+        print(f"[bench_qps] adaptive: "
+              f"{_adaptive_headline(results['adaptive_vs_fixed'])}")
     path = save_json("qps", results)
     print(f"[bench_qps] -> {path}")
     return results
+
+
+# ------------------------------------------------- adaptive vs fixed (ISSUE 7)
+def _query_stream(db, batch, rounds, ood_every, k, seed):
+    """Mixed traffic: every ``ood_every``-th batch is out-of-distribution
+    (the modality-gap hard case the controller must react to)."""
+    from repro.data.synthetic import make_queries_in_dist, make_queries_ood
+
+    stream = []
+    for i in range(rounds):
+        hard = bool(ood_every) and (i + 1) % ood_every == 0
+        maker = make_queries_ood if hard else make_queries_in_dist
+        q = maker(db, batch, seed=seed + 100 + i)
+        gt, _ = exact_knn(q, db, k)
+        stream.append((q, gt, hard))
+    return stream
+
+
+def measure_adaptive(
+    w,
+    *,
+    ladder=DEFAULT_LADDER,
+    batch: int = 64,
+    rounds: int = 18,
+    ood_every: int = 3,
+    k: int = 10,
+    seed: int = 0,
+) -> dict:
+    """Adaptive controller vs every fixed rung on one mixed query stream.
+
+    All runs search *instrumented* (telemetry is what the controller
+    consumes, so that is the honest serving program for every contender);
+    controller bookkeeping happens off the timed path.
+    """
+    stream = _query_stream(w.db, batch, rounds, ood_every, k, seed)
+    idx = w.index
+    with obs.span("bench.adaptive.warmup", rungs=len(ladder)):
+        idx.warmup_ladder(ladder, batch_size=batch, k=k)
+
+    def drive(controller=None, rung=None) -> dict:
+        total_s, recalls, beams = 0.0, [], []
+        for q, gt, _hard in stream:
+            r = controller.params if controller is not None else rung
+            t0 = time.time()
+            res, tele = idx.search(
+                q, k=k, beam_width=r.beam_width, max_hops=r.max_hops,
+                instrument=True, record=False,
+            )
+            jax.block_until_ready(res.ids)
+            dt = time.time() - t0
+            total_s += dt
+            recalls.append(recall_at_k(np.asarray(res.ids), gt, k))
+            beams.append(r.beam_width)
+            if controller is not None:
+                s = obs.summarize(tele)
+                s["latency_s"] = dt
+                controller.window.push(s)
+                controller.step()
+        return {
+            "qps": rounds * batch / total_s,
+            f"recall@{k}": float(np.mean(recalls)),
+            "mean_beam_width": float(np.mean(beams)),
+            "beam_trace": beams,
+        }
+
+    controller = AdaptiveController(
+        RollingWindow(4), ladder,
+        min_batches=2, patience=1, cooldown=1,
+        registry=obs.get_registry(),
+    )
+    out = {
+        "stream": {"batch": batch, "rounds": rounds, "ood_every": ood_every},
+        "adaptive": drive(controller=controller),
+        "fixed": {
+            f"beam={r.beam_width}": drive(rung=r) for r in ladder
+        },
+    }
+    out["adaptive"]["ladder_moves"] = len(controller.history)
+    return out
+
+
+def _adaptive_headline(res: dict) -> str:
+    ad = res["adaptive"]
+    rk = next(k for k in ad if k.startswith("recall@"))
+    # smallest fixed rung matching the adaptive run's recall
+    match = [
+        (name, row) for name, row in res["fixed"].items()
+        if row[rk] >= ad[rk] - 0.005
+    ]
+    if not match:
+        return (f"{rk}={ad[rk]:.3f} at {ad['qps']:.0f} qps — no fixed rung "
+                f"matches that recall")
+    name, row = min(match, key=lambda kv: kv[1]["mean_beam_width"])
+    return (
+        f"{rk}={ad[rk]:.3f} at {ad['qps']:.0f} qps "
+        f"(mean beam {ad['mean_beam_width']:.1f}, "
+        f"{ad['ladder_moves']} moves) vs {name} "
+        f"{row['qps']:.0f} qps ({ad['qps'] / row['qps']:.2f}x)"
+    )
 
 
 def _speedup_at_matched_recall(per: dict) -> str:
@@ -77,5 +199,7 @@ if __name__ == "__main__":
     ap.add_argument("--no-instrument", dest="instrument",
                     action="store_false",
                     help="skip telemetry collection (pure QPS run)")
+    ap.add_argument("--no-adaptive", dest="adaptive", action="store_false",
+                    help="skip the adaptive-vs-fixed serving comparison")
     args = ap.parse_args()
-    run(args.mode, instrument=args.instrument)
+    run(args.mode, instrument=args.instrument, adaptive=args.adaptive)

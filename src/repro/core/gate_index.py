@@ -253,6 +253,40 @@ class GateIndex:
             return entries, nav_hops
         return entries
 
+    def warmup_ladder(
+        self,
+        ladder,
+        *,
+        batch_size: int,
+        k: int = 10,
+        visited_ring: int = 512,
+        instrument: bool = True,
+    ) -> int:
+        """Precompile one search program per ladder rung (ISSUE 7).
+
+        ``beam_width``/``max_hops`` are static jit arguments, so the adaptive
+        controller's ladder moves would otherwise recompile on first use of
+        each rung — at serving time, under traffic.  One dummy batch per rung
+        here moves every compile to startup; afterwards adaptation is a jit
+        cache lookup (``graphs.search.search_jit_cache_size()`` stays flat).
+
+        Returns the number of rungs warmed.  ``batch_size`` must match the
+        serving batch shape (shape changes also recompile).
+        """
+        d = self.db.shape[1]
+        dummy = np.zeros((batch_size, d), self.db.dtype)
+        with span("gate.warmup_ladder", rungs=len(ladder),
+                  batch_size=batch_size):
+            for rung in ladder:
+                out = self.search(
+                    dummy, k=k, beam_width=rung.beam_width,
+                    max_hops=rung.max_hops, visited_ring=visited_ring,
+                    instrument=instrument, record=False,
+                )
+                res = out[0] if instrument else out
+                jax.block_until_ready(res.ids)
+        return len(ladder)
+
     def search(
         self,
         queries: np.ndarray,
@@ -262,11 +296,17 @@ class GateIndex:
         max_hops: int = 256,
         visited_ring: int = 512,
         instrument: bool = False,
+        record: bool = True,
     ):
         """GATE search.  Returns ``SearchResult``; with ``instrument=True``
         returns ``(SearchResult, SearchTelemetry)``, records the batch into
         the default metrics registry (``search.*`` instruments) and warns if
-        the visited ring overflowed (nodes silently re-scored)."""
+        the visited ring overflowed (nodes silently re-scored).
+
+        ``record=False`` keeps the telemetry return but skips the registry /
+        warning side effects — used by ``warmup_ladder`` (dummy batches must
+        not pollute metrics) and by callers that fold telemetry into their
+        own window/registry."""
         dev = self._device()
         if not instrument:
             entries = self.select_entries(queries)
@@ -283,8 +323,11 @@ class GateIndex:
                 visited_ring=visited_ring, instrument=True,
             )
         tele = tele._replace(nav_hops=nav_hops)
-        record_search_telemetry(tele)
-        warn_on_ring_overflow(tele, visited_ring, where="GateIndex.search")
+        if record:
+            record_search_telemetry(tele)
+            warn_on_ring_overflow(
+                tele, visited_ring, where="GateIndex.search"
+            )
         return res, tele
 
     def search_baseline(

@@ -20,6 +20,12 @@ aliasing signal), beam-convergence hop, entry quality — on device, so
 instrumentation costs one transfer per batch.  ``instrument=False`` (the
 default) traces the exact pre-telemetry program: no extra loop state, no
 telemetry ops in the HLO.
+
+``beam_width`` / ``max_hops`` are static: each distinct pair is a separate
+XLA program.  The adaptive controller (``repro.obs.adaptive``) therefore
+moves along a small precompiled *ladder* of pairs — warm every rung once
+(``GateIndex.warmup_ladder``) and adaptation never recompiles;
+``search_jit_cache_size()`` is the assertion hook for that invariant.
 """
 from __future__ import annotations
 
@@ -217,6 +223,14 @@ def batched_search(
         return SearchResult(beam_ids[:, :k], beam_d[:, :k], hops, evals)
     beam_ids, beam_d, hops, evals, tele = jax.vmap(fn)(queries, entry_ids)
     return SearchResult(beam_ids[:, :k], beam_d[:, :k], hops, evals), tele
+
+
+def search_jit_cache_size() -> int:
+    """Number of distinct compiled ``batched_search`` programs (one per
+    (shapes, beam_width, max_hops, …) combination).  The adaptive-serving
+    invariant — ladder moves are jit-cache lookups, never recompiles — is
+    asserted by checking this stays flat across controller steps."""
+    return batched_search._cache_size()
 
 
 def beam_search_fixed(

@@ -2,7 +2,11 @@
 
     python -m repro.launch.serve --arch gemma-2b --reduced --batch 4 --new 16
     python -m repro.launch.serve --arch gemma-2b --reduced --rag \
-        --db-size 4000 --k 4
+        --db-size 4000 --k 4 --metrics-port 9100
+
+``--metrics-port`` exposes the live metrics registry over HTTP for the run
+(Prometheus text at /metrics; see repro.obs.exporter).  For a long-running
+queue-driven server use ``python -m repro.serve.daemon`` instead.
 """
 from __future__ import annotations
 
@@ -14,6 +18,7 @@ import numpy as np
 
 from repro.configs import get_config, get_reduced
 from repro.models.model import build_model
+from repro.obs import MetricsExporter
 from repro.serve.engine import ServeEngine
 
 
@@ -28,9 +33,31 @@ def main():
     ap.add_argument("--rag", action="store_true")
     ap.add_argument("--db-size", type=int, default=4000)
     ap.add_argument("--k", type=int, default=4)
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="expose /metrics on this port for the run "
+                         "(0 = ephemeral)")
+    ap.add_argument("--hold-metrics", type=float, default=0.0,
+                    help="keep the /metrics endpoint up this many seconds "
+                         "after the run finishes")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
+    exporter = None
+    if args.metrics_port is not None:
+        exporter = MetricsExporter(port=args.metrics_port)
+        port = exporter.start()
+        print(f"metrics on http://127.0.0.1:{port}/metrics", flush=True)
+    try:
+        _run(args)
+        if exporter is not None and args.hold_metrics > 0:
+            print(f"holding /metrics for {args.hold_metrics:.0f}s", flush=True)
+            time.sleep(args.hold_metrics)
+    finally:
+        if exporter is not None:
+            exporter.stop()
+
+
+def _run(args):
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))

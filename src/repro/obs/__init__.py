@@ -1,6 +1,6 @@
-"""repro.obs — end-to-end search/serve/train observability (ISSUE 6).
+"""repro.obs — end-to-end search/serve/train observability (ISSUE 6 + 7).
 
-Three parts:
+Offline half (ISSUE 6):
   registry   — counters / gauges / fixed-bucket histograms; JSON +
                Prometheus-text export (``get_registry()``)
   trace      — host-side ``span()`` / ``@traced`` → chrome://tracing JSONL
@@ -8,8 +8,18 @@ Three parts:
   telemetry  — ``SearchTelemetry`` pytree accumulated inside the jitted
                search loops + host-side recording/warnings
 
+Online half (ISSUE 7):
+  exporter   — ``MetricsExporter``: /metrics (Prometheus), /metrics.json,
+               /healthz, /debug/telemetry over stdlib http.server
+  window     — ``RollingWindow``: last-N-batches SLO aggregates
+               (latency p50/p95/p99, entry-quality quantiles, eviction rates)
+  adaptive   — ``AdaptiveController``: telemetry-driven beam/max_hops ladder
+               stepping over precompiled static configs
+
 See docs/observability.md.
 """
+from repro.obs.adaptive import AdaptiveController, DEFAULT_LADDER, LadderRung
+from repro.obs.exporter import MetricsExporter
 from repro.obs.registry import (
     Counter,
     Gauge,
@@ -27,15 +37,21 @@ from repro.obs.telemetry import (
     warn_on_ring_overflow,
 )
 from repro.obs.trace import Tracer, get_tracer, read_trace, span, traced
+from repro.obs.window import RollingWindow
 
 __all__ = [
+    "AdaptiveController",
     "Counter",
+    "DEFAULT_LADDER",
     "Gauge",
     "Histogram",
     "LATENCY_BUCKETS",
+    "LadderRung",
+    "MetricsExporter",
     "MetricsRegistry",
     "POW2_BUCKETS",
     "RATIO_BUCKETS",
+    "RollingWindow",
     "SearchTelemetry",
     "Tracer",
     "get_registry",

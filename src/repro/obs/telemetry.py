@@ -61,6 +61,11 @@ def summarize(tele: SearchTelemetry) -> dict:
         "mean_nav_hops": float(t.nav_hops.mean()),
         "mean_entry_dist": float(t.entry_dist.mean()),
         "mean_entry_rank_proxy": float(t.entry_rank_proxy.mean()),
+        # tail entry quality within the batch — the rolling window / adaptive
+        # controller key off this, not the mean (hard queries are the tail)
+        "p95_entry_rank_proxy": float(
+            np.quantile(np.atleast_1d(t.entry_rank_proxy), 0.95)
+        ),
         "ring_evictions_total": int(t.ring_evictions.sum()),
         "ring_overflow_queries": overflow,
     }
@@ -100,15 +105,28 @@ def record_search_telemetry(
 
 
 def warn_on_ring_overflow(
-    tele: SearchTelemetry, visited_ring: int, where: str = "search"
+    tele: SearchTelemetry,
+    visited_ring: int,
+    where: str = "search",
+    registry: MetricsRegistry = None,
 ) -> int:
     """Host-side warning for the visited-ring aliasing satellite: when total
     expansions exceed the ring capacity, old entries are evicted and their
     nodes can silently be re-scored (wasted dist-evals, inflated recall
-    variance).  Returns the number of affected queries."""
+    variance).  Returns the number of affected queries.
+
+    Besides the stderr ``RuntimeWarning``, overflow increments the
+    ``search.ring_overflow_queries`` counter so it is visible on a
+    ``/metrics`` scrape, not just in logs (ISSUE 7 satellite).
+    """
     ev = np.asarray(tele.ring_evictions)
     n = int((ev > 0).sum())
     if n:
+        reg = registry if registry is not None else get_registry()
+        reg.counter(
+            "search.ring_overflow_queries",
+            "queries whose visited ring overflowed (possible re-scoring)",
+        ).inc(n)
         warnings.warn(
             f"[{where}] visited-ring overflow on {n}/{ev.shape[0]} queries "
             f"({int(ev.sum())} evictions, ring={visited_ring}): nodes may be "

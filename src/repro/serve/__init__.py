@@ -1,4 +1,22 @@
 from repro.serve.engine import GenerationResult, ServeEngine
 from repro.serve.retrieval import RagPipeline, RagResult
 
-__all__ = ["GenerationResult", "RagPipeline", "RagResult", "ServeEngine"]
+__all__ = [
+    "GenerationResult",
+    "PendingResult",
+    "RagPipeline",
+    "RagResult",
+    "SearchRequest",
+    "ServeDaemon",
+    "ServeEngine",
+]
+
+
+def __getattr__(name):
+    # daemon lazily: `python -m repro.serve.daemon` would otherwise import
+    # the module twice (runpy RuntimeWarning) via this package __init__
+    if name in ("ServeDaemon", "SearchRequest", "PendingResult"):
+        from repro.serve import daemon
+
+        return getattr(daemon, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,311 @@
+"""Long-running serving daemon (ISSUE 7): a request queue in front of
+``GateIndex.search`` / ``RagPipeline``, per-request latency into
+``LATENCY_BUCKETS``, a rolling SLO window, an optional adaptive controller,
+and the whole registry exposed on ``GET /metrics``.
+
+Architecture — one worker thread, everything else observes it:
+
+    submit() ──► queue ──► worker ──► index.search / pipeline()
+                             │            (current ladder rung, instrumented)
+                             ├─► registry   search.latency_seconds, search.*
+                             ├─► window     summarize(tele) + latency_s
+                             └─► controller step() (hysteresis ladder moves)
+    exporter (daemon thread) ◄── /metrics /metrics.json /healthz /debug/telemetry
+
+The worker is deliberately single-threaded: the jitted search is itself
+batched and device-bound, so queueing — not thread fan-out — is the right
+concurrency model, and it keeps ladder stepping race-free.
+
+CLI smoke / load-drive mode:
+
+    python -m repro.serve.daemon --n 400 --batches 8 --metrics-port 9100
+    curl -s localhost:9100/metrics | grep search_latency_seconds_bucket
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import queue
+import threading
+import time
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.gate_index import GateIndex
+from repro.obs import (
+    AdaptiveController,
+    DEFAULT_LADDER,
+    LATENCY_BUCKETS,
+    LadderRung,
+    MetricsExporter,
+    RollingWindow,
+    get_registry,
+    summarize,
+)
+
+
+@dataclass
+class SearchRequest:
+    queries: np.ndarray                        # (B, d)
+    k: int = 10
+    # RAG: when the daemon has a pipeline and the request carries prompts,
+    # the worker generates instead of bare search
+    prompt_tokens: Optional[np.ndarray] = None
+    max_new_tokens: int = 16
+
+
+class PendingResult:
+    """Minimal future: the worker fulfils it, the submitter waits on it."""
+
+    def __init__(self):
+        self._done = threading.Event()
+        self.result = None
+        self.error: Optional[BaseException] = None
+
+    def _fulfil(self, result=None, error=None):
+        self.result = result
+        self.error = error
+        self._done.set()
+
+    def get(self, timeout: Optional[float] = None):
+        if not self._done.wait(timeout):
+            raise TimeoutError("request not served in time")
+        if self.error is not None:
+            raise self.error
+        return self.result
+
+
+class ServeDaemon:
+    """Queue-driven search/RAG serving with live metrics and adaptation."""
+
+    def __init__(
+        self,
+        index: GateIndex,
+        *,
+        pipeline=None,                 # optional repro.serve.RagPipeline
+        ladder: Sequence[LadderRung] = DEFAULT_LADDER,
+        adaptive: bool = True,
+        level: Optional[int] = None,
+        window_size: int = 16,
+        batch_size: int = 16,
+        k: int = 10,
+        visited_ring: int = 512,
+        metrics_host: str = "127.0.0.1",
+        metrics_port: Optional[int] = None,
+        controller_kw: Optional[dict] = None,
+    ):
+        self.index = index
+        self.pipeline = pipeline
+        self.ladder = tuple(ladder)
+        self.adaptive = adaptive
+        self.batch_size = batch_size
+        self.k = k
+        self.visited_ring = visited_ring
+        self.window = RollingWindow(window_size)
+        self.controller = AdaptiveController(
+            self.window, self.ladder, level=level, **(controller_kw or {})
+        )
+        if pipeline is not None:
+            # the pipeline owns window pushes + controller steps on RAG path
+            pipeline.controller = self.controller
+            pipeline.instrument = True
+        self.exporter = (
+            MetricsExporter(
+                window=self.window, host=metrics_host, port=metrics_port
+            )
+            if metrics_port is not None
+            else None
+        )
+        self._queue: "queue.Queue" = queue.Queue()
+        self._stop = threading.Event()
+        self._worker: Optional[threading.Thread] = None
+        self._reg = get_registry()
+
+    # ------------------------------------------------------------- lifecycle
+    def start(self, warmup: bool = True) -> Optional[int]:
+        """Warm the ladder, start exporter + worker; returns metrics port."""
+        port = self.exporter.start() if self.exporter is not None else None
+        if warmup:
+            rungs = self.ladder if self.adaptive else (self.controller.params,)
+            self.index.warmup_ladder(
+                rungs, batch_size=self.batch_size, k=self.k,
+                visited_ring=self.visited_ring,
+            )
+        self._stop.clear()
+        self._worker = threading.Thread(
+            target=self._run, name="serve-daemon-worker", daemon=True
+        )
+        self._worker.start()
+        return port
+
+    def stop(self, timeout: float = 10.0) -> None:
+        self._stop.set()
+        if self._worker is not None:
+            self._worker.join(timeout)
+            self._worker = None
+        if self.exporter is not None:
+            self.exporter.stop()
+
+    def __enter__(self) -> "ServeDaemon":
+        self.start()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -------------------------------------------------------------- requests
+    def submit(self, req: SearchRequest) -> PendingResult:
+        pending = PendingResult()
+        self._queue.put((req, pending))
+        if self._reg.enabled:
+            self._reg.gauge(
+                "daemon.queue_depth", "requests waiting in the daemon queue"
+            ).set(self._queue.qsize())
+        return pending
+
+    def search(self, queries: np.ndarray, k: Optional[int] = None,
+               timeout: float = 60.0):
+        """Synchronous convenience wrapper around submit()."""
+        return self.submit(
+            SearchRequest(queries=queries, k=k if k is not None else self.k)
+        ).get(timeout)
+
+    # ---------------------------------------------------------------- worker
+    def _run(self) -> None:
+        while not self._stop.is_set():
+            try:
+                req, pending = self._queue.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            t0 = time.perf_counter()
+            try:
+                result = self._serve_one(req)
+            except BaseException as e:  # noqa: BLE001 — surfaced via future
+                self._reg.counter(
+                    "daemon.errors", "requests that raised"
+                ).inc()
+                pending._fulfil(error=e)
+                continue
+            dt = time.perf_counter() - t0
+            if self._reg.enabled:
+                self._reg.histogram(
+                    "search.latency_seconds",
+                    "end-to-end request latency (daemon)",
+                    LATENCY_BUCKETS,
+                ).observe(dt)
+                self._reg.counter("daemon.requests", "served requests").inc()
+                self._reg.counter(
+                    "daemon.queries", "served queries"
+                ).inc(len(req.queries))
+                self._reg.gauge(
+                    "daemon.queue_depth",
+                    "requests waiting in the daemon queue",
+                ).set(self._queue.qsize())
+            pending._fulfil(result=result)
+
+    def _serve_one(self, req: SearchRequest):
+        if self.pipeline is not None and req.prompt_tokens is not None:
+            # RAG path: the pipeline searches at the controller's rung,
+            # pushes its own window summary and steps the controller
+            return self.pipeline(
+                req.queries, req.prompt_tokens,
+                max_new_tokens=req.max_new_tokens,
+            )
+        rung = self.controller.params
+        t0 = time.perf_counter()
+        res, tele = self.index.search(
+            req.queries, k=req.k, beam_width=rung.beam_width,
+            max_hops=rung.max_hops, visited_ring=self.visited_ring,
+            instrument=True,
+        )
+        s = summarize(tele)
+        s["latency_s"] = time.perf_counter() - t0
+        self.window.push(s)
+        if self.adaptive:
+            self.controller.step()
+        return res, tele
+
+
+# --------------------------------------------------------------------- CLI
+def _build_tiny_index(n: int, profile: str, seed: int) -> GateIndex:
+    from repro.core.gate_index import GateConfig
+    from repro.data.synthetic import make_database, make_queries_in_dist
+    from repro.graphs.nsg import build_nsg
+
+    db, _ = make_database(profile, n, seed=seed)
+    nsg = build_nsg(db, R=12, knn_k=12, search_l=16, pool_size=32)
+    tq = make_queries_in_dist(db, 64, seed=seed + 1)
+    return GateIndex.from_graph(
+        db, nsg.neighbors, nsg.enter_id, tq,
+        GateConfig(n_hubs=8, epochs=4, batch_hubs=8, subgraph_max_nodes=32,
+                   seed=seed),
+    )
+
+
+def main(argv: Optional[Sequence[str]] = None) -> None:
+    ap = argparse.ArgumentParser(
+        description="GATE serving daemon with /metrics + adaptive search"
+    )
+    ap.add_argument("--n", type=int, default=400,
+                    help="synthetic database size")
+    ap.add_argument("--profile", default="sift10m-like")
+    ap.add_argument("--batch", type=int, default=16,
+                    help="queries per request batch")
+    ap.add_argument("--batches", type=int, default=8,
+                    help="synthetic request batches to drive")
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--ood-every", type=int, default=0,
+                    help="every Nth batch is out-of-distribution (0 = never)")
+    ap.add_argument("--metrics-port", type=int, default=0,
+                    help="0 = ephemeral (printed at startup)")
+    ap.add_argument("--serve-seconds", type=float, default=0.0,
+                    help="keep serving /metrics this long after the drive "
+                         "loop (Ctrl-C exits early)")
+    ap.add_argument("--no-adaptive", dest="adaptive", action="store_false")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    from repro.data.synthetic import make_queries_in_dist, make_queries_ood
+
+    print(f"[daemon] building index (n={args.n}, {args.profile}) ...",
+          flush=True)
+    index = _build_tiny_index(args.n, args.profile, args.seed)
+    daemon = ServeDaemon(
+        index, adaptive=args.adaptive, batch_size=args.batch, k=args.k,
+        metrics_port=args.metrics_port,
+    )
+    port = daemon.start()
+    print(f"[daemon] metrics on http://127.0.0.1:{port}/metrics", flush=True)
+    print("[daemon] ready", flush=True)
+
+    try:
+        for i in range(args.batches):
+            hard = args.ood_every and (i + 1) % args.ood_every == 0
+            maker = make_queries_ood if hard else make_queries_in_dist
+            q = maker(index.db, args.batch, seed=args.seed + 10 + i)
+            res, _tele = daemon.search(q)
+            rung = daemon.controller.params
+            print(
+                f"[daemon] batch {i + 1}/{args.batches} "
+                f"({'ood' if hard else 'in-dist'}) "
+                f"beam={rung.beam_width} max_hops={rung.max_hops} "
+                f"mean_hops={float(np.asarray(res.hops).mean()):.1f}",
+                flush=True,
+            )
+        if args.serve_seconds > 0:
+            print(f"[daemon] serving /metrics for {args.serve_seconds:.0f}s "
+                  f"(Ctrl-C to exit)", flush=True)
+            time.sleep(args.serve_seconds)
+    except KeyboardInterrupt:
+        print("[daemon] interrupted", flush=True)
+    finally:
+        snap = daemon.window.snapshot()
+        daemon.stop()
+        print("[daemon] final window: " + json.dumps(snap), flush=True)
+        print("[daemon] shut down cleanly", flush=True)
+
+
+if __name__ == "__main__":
+    main()

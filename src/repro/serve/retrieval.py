@@ -5,18 +5,29 @@ hits the GATE index, retrieved neighbor ids map to context token blocks, and
 the serving engine generates conditioned on [retrieved ‖ prompt].
 
 ``RagPipeline`` keeps the two halves composable: any GateIndex (or the
-sharded core.distributed search step) × any ServeEngine.
+sharded core.distributed search step) × any ServeEngine.  An optional
+``AdaptiveController`` (ISSUE 7) closes the loop: each batch searches with
+the controller's current ladder rung, its telemetry summary lands in the
+controller's rolling window, and the controller steps after the batch.
 """
 from __future__ import annotations
 
+import time
+import warnings
 from dataclasses import dataclass
-from typing import Callable, Dict, Optional
+from typing import Optional
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.gate_index import GateIndex
-from repro.obs import SearchTelemetry, span
+from repro.obs import (
+    AdaptiveController,
+    SearchTelemetry,
+    get_registry,
+    span,
+    summarize,
+)
 from repro.serve.engine import GenerationResult, ServeEngine
 
 
@@ -38,20 +49,53 @@ class RagPipeline:
         k: int = 4,
         beam_width: int = 64,
         instrument: bool = False,
+        pad_token: int = 0,
+        controller: Optional[AdaptiveController] = None,
     ):
         self.index = index
         self.engine = engine
         self.doc_tokens = doc_tokens
         self.k = k
         self.beam_width = beam_width
-        self.instrument = instrument
+        # the controller needs telemetry to vote on
+        self.instrument = instrument or controller is not None
+        self.pad_token = pad_token
+        self.controller = controller
 
     def _splice(self, prompt_tokens: np.ndarray, ids: np.ndarray) -> np.ndarray:
-        """[doc_0 ‖ … ‖ doc_{k-1} ‖ prompt] per request."""
+        """[doc_0 ‖ … ‖ doc_{k-1} ‖ prompt] per request.
+
+        Invalid retrieved ids (``-1`` — the search returned fewer than k
+        candidates) used to be silently mapped to doc 0, splicing an
+        unrelated document into the context.  They now splice a
+        ``pad_token`` block instead, increment ``rag.invalid_ids``, and warn
+        once per call (ISSUE 7 satellite).
+        """
         B = prompt_tokens.shape[0]
+        invalid = ids < 0                                # (B, k)
         docs = self.doc_tokens[np.maximum(ids, 0)]       # (B, k, doc_len)
+        n_bad = int(invalid.sum())
+        if n_bad:
+            get_registry().counter(
+                "rag.invalid_ids",
+                "retrieved ids < 0 replaced by padding blocks",
+            ).inc(n_bad)
+            warnings.warn(
+                f"[RagPipeline] {n_bad}/{ids.size} retrieved ids invalid "
+                f"(-1); splicing pad blocks — raise beam_width or check the "
+                f"index",
+                RuntimeWarning,
+                stacklevel=3,
+            )
+            docs = np.where(invalid[:, :, None], self.pad_token, docs)
         docs = docs.reshape(B, -1)
         return np.concatenate([docs, prompt_tokens], axis=1).astype(np.int32)
+
+    def search_params(self) -> dict:
+        """Current search kwargs — the controller's rung when adaptive."""
+        if self.controller is not None:
+            return self.controller.params.kwargs()
+        return {"beam_width": self.beam_width}
 
     def __call__(
         self,
@@ -61,18 +105,22 @@ class RagPipeline:
         **gen_kw,
     ) -> RagResult:
         tele = None
-        with span("rag.retrieve", batch=len(query_vecs), k=self.k,
-                  beam_width=self.beam_width):
+        params = self.search_params()
+        with span("rag.retrieve", batch=len(query_vecs), k=self.k, **params):
+            t0 = time.perf_counter()
             if self.instrument:
                 res, tele = self.index.search(
-                    query_vecs, k=self.k, beam_width=self.beam_width,
-                    instrument=True,
+                    query_vecs, k=self.k, instrument=True, **params
                 )
             else:
-                res = self.index.search(
-                    query_vecs, k=self.k, beam_width=self.beam_width
-                )
+                res = self.index.search(query_vecs, k=self.k, **params)
             ids = np.asarray(res.ids)
+            dt = time.perf_counter() - t0
+        if self.controller is not None and tele is not None:
+            s = summarize(tele)
+            s["latency_s"] = dt
+            self.controller.window.push(s)
+            self.controller.step()
         tokens = self._splice(prompt_tokens, ids)
         with span("rag.generate", batch=len(query_vecs),
                   max_new=max_new_tokens):

@@ -1,0 +1,230 @@
+"""Rolling window + adaptive controller (ISSUE 7): aggregation, hysteresis,
+and the no-recompile invariant of the precompiled beam ladder."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.graphs.knn import knn_graph
+from repro.graphs.search import batched_search, search_jit_cache_size
+from repro.obs.adaptive import AdaptiveController, DEFAULT_LADDER, LadderRung
+from repro.obs.registry import MetricsRegistry
+from repro.obs.window import RollingWindow
+
+
+def make_summary(
+    queries=32,
+    latency_s=0.01,
+    mean_hops=40.0,
+    mean_converged_hop=30.0,
+    proxy_mean=2.0,
+    proxy_p95=3.0,
+    overflow=0,
+    evictions=0,
+):
+    """A summarize(tele)-shaped dict with controllable hardness signals."""
+    return {
+        "queries": queries,
+        "latency_s": latency_s,
+        "mean_hops": mean_hops,
+        "mean_dist_evals": 10.0 * mean_hops,
+        "mean_converged_hop": mean_converged_hop,
+        "mean_nav_hops": 1.0,
+        "mean_entry_rank_proxy": proxy_mean,
+        "p95_entry_rank_proxy": proxy_p95,
+        "ring_evictions_total": evictions,
+        "ring_overflow_queries": overflow,
+    }
+
+
+EASY = dict(mean_hops=40.0, mean_converged_hop=8.0,   # converged at 20%
+            proxy_mean=1.2, proxy_p95=1.5)
+HARD = dict(mean_hops=40.0, mean_converged_hop=39.0,  # still improving
+            proxy_mean=12.0, proxy_p95=40.0, overflow=4)
+
+
+# ------------------------------------------------------------------ window
+def test_window_ring_eviction_and_counts():
+    w = RollingWindow(size=3)
+    for i in range(5):
+        w.push(make_summary(queries=10 + i))
+    assert len(w) == 3
+    assert w.total_pushed == 5
+    snap = w.snapshot()
+    assert snap["batches"] == 3
+    assert snap["queries"] == 12 + 13 + 14  # only the retained batches
+
+
+def test_window_latency_quantiles_and_rates():
+    w = RollingWindow(size=16)
+    for lat in (0.01,) * 9 + (1.0,):
+        w.push(make_summary(latency_s=lat, overflow=2, evictions=20,
+                            queries=10))
+    snap = w.snapshot()
+    assert snap["latency_p50"] == pytest.approx(0.01)
+    assert snap["latency_p99"] > 0.5
+    assert snap["eviction_rate"] == pytest.approx(20 * 10 / 100)
+    assert snap["ring_overflow_rate"] == pytest.approx(0.2)
+    assert snap["qps"] == pytest.approx(100 / (9 * 0.01 + 1.0))
+
+
+def test_window_weighted_means_and_missing_keys():
+    w = RollingWindow(size=8)
+    w.push({"queries": 10, "mean_hops": 10.0})
+    w.push({"queries": 30, "mean_hops": 50.0})
+    w.push({"queries": 5})  # no mean_hops — must not poison the aggregate
+    snap = w.snapshot()
+    assert snap["mean_hops"] == pytest.approx((10 * 10 + 30 * 50) / 40)
+    assert "latency_p50" not in snap
+    assert snap["queries"] == 45
+
+
+def test_window_empty_snapshot():
+    snap = RollingWindow(size=4).snapshot()
+    assert snap["batches"] == 0 and snap["queries"] == 0
+
+
+# -------------------------------------------------------------- controller
+def controller(reg=None, **kw):
+    kw.setdefault("min_batches", 1)
+    kw.setdefault("patience", 1)
+    kw.setdefault("cooldown", 0)
+    return AdaptiveController(
+        RollingWindow(8), DEFAULT_LADDER,
+        registry=reg or MetricsRegistry(), **kw,
+    )
+
+
+def test_decide_votes():
+    c = controller()
+    assert c.decide(RollingWindow(4).snapshot()) == 0       # empty → hold
+    assert c.decide(make_summary(**EASY) | {"entry_rank_proxy_p95": 1.5}) == -1
+    assert c.decide(make_summary(**HARD) | {"entry_rank_proxy_p95": 40.0,
+                                            "ring_overflow_rate": 0.5}) == 1
+    # overflow alone is enough to vote up
+    assert c.decide({"ring_overflow_rate": 0.5}) == 1
+    # converged late, good entries → hold
+    assert c.decide({"mean_hops": 40.0, "mean_converged_hop": 35.0,
+                     "entry_rank_proxy_p95": 2.0}) == 0
+
+
+def test_controller_steps_up_on_hard_traffic():
+    reg = MetricsRegistry()
+    c = controller(reg, level=1)
+    for _ in range(2):
+        c.window.push(make_summary(**HARD))
+    assert c.step() == DEFAULT_LADDER[2]
+    assert c.level == 2
+    assert reg.get("adaptive.steps_up").value == 1
+    assert reg.get("adaptive.beam_width").value == DEFAULT_LADDER[2].beam_width
+
+
+def test_controller_steps_down_on_easy_traffic():
+    c = controller(level=3)
+    c.window.push(make_summary(**EASY))
+    assert c.step().beam_width == DEFAULT_LADDER[2].beam_width
+
+
+def test_controller_hysteresis_patience():
+    c = controller(level=2, patience=3)
+    for _ in range(2):  # two hard batches: below patience → hold
+        c.window.push(make_summary(**HARD))
+        c.step()
+    assert c.level == 2
+    c.window.push(make_summary(**HARD))
+    c.step()            # third consecutive up-vote → move
+    assert c.level == 3
+
+
+def test_controller_vote_flip_resets_streak():
+    c = controller(level=2, patience=2)
+    c.window.push(make_summary(**HARD))
+    c.step()
+    c.window.clear()
+    c.window.push(make_summary(**EASY))
+    c.step()            # flip: streak restarts at -1, no move yet
+    assert c.level == 2
+
+
+def test_controller_cooldown_and_window_reset():
+    c = controller(level=1, patience=1, cooldown=2)
+    c.window.push(make_summary(**HARD))
+    c.step()
+    assert c.level == 2
+    assert len(c.window) == 0  # post-move stats start fresh
+    for _ in range(2):         # cooldown swallows the next two steps
+        c.window.push(make_summary(**HARD))
+        assert c.step() == DEFAULT_LADDER[2]
+    c.window.push(make_summary(**HARD))
+    c.step()
+    assert c.level == 3
+
+
+def test_controller_clamps_at_ladder_edges():
+    c = controller(level=len(DEFAULT_LADDER) - 1)
+    for _ in range(4):
+        c.window.push(make_summary(**HARD))
+        c.step()
+    assert c.level == len(DEFAULT_LADDER) - 1
+    c2 = controller(level=0)
+    for _ in range(4):
+        c2.window.push(make_summary(**EASY))
+        c2.step()
+    assert c2.level == 0
+
+
+def test_controller_min_batches_gate():
+    c = controller(min_batches=3)
+    c.window.push(make_summary(**HARD))
+    start = c.level
+    assert c.step() == DEFAULT_LADDER[start]
+    assert c.level == start
+
+
+# ------------------------------------------- precompiled ladder, no recompile
+def test_adaptive_ladder_no_recompile_on_moves():
+    """Acceptance (ISSUE 7): the controller changes beam_width across the
+    ladder in response to injected easy/hard telemetry, and searching at
+    every visited rung hits the warmed jit cache — zero cache misses."""
+    rng = np.random.default_rng(0)
+    db = jnp.asarray(rng.standard_normal((300, 16)).astype(np.float32))
+    nbrs = jnp.asarray(knn_graph(np.asarray(db), 8))
+    q = jnp.asarray(rng.standard_normal((8, 16)).astype(np.float32))
+    entries = jnp.zeros((8, 1), jnp.int32)
+
+    ladder = (LadderRung(8, 32), LadderRung(16, 64), LadderRung(32, 128))
+
+    def search_at(rung):
+        res, tele = batched_search(
+            db, nbrs, q, entries, beam_width=rung.beam_width,
+            max_hops=rung.max_hops, k=5, instrument=True,
+        )
+        return res, tele
+
+    for rung in ladder:  # warm every rung once (GateIndex.warmup_ladder role)
+        search_at(rung)
+    warmed = search_jit_cache_size()
+
+    reg = MetricsRegistry()
+    # window of 2: stale hard batches age out fast enough for the easy
+    # phase to win within this short injected trace
+    c = AdaptiveController(
+        RollingWindow(2), ladder, level=1, min_batches=1, patience=1,
+        cooldown=0, registry=reg,
+    )
+    visited_beams = []
+    # hard traffic → climb to the top rung, then easy → descend to the bottom
+    for phase in (HARD, HARD, EASY, EASY, EASY, EASY):
+        rung = c.params
+        visited_beams.append(rung.beam_width)
+        _res, tele = search_at(rung)
+        s = obs.summarize(tele)
+        s.update(make_summary(**phase))   # inject hardness signals
+        c.window.push(s)
+        c.step()
+
+    assert len(set(visited_beams)) >= 3          # actually moved across rungs
+    assert 32 in visited_beams and 8 in visited_beams
+    assert search_jit_cache_size() == warmed     # zero recompiles while moving
+    assert reg.get("adaptive.steps_up").value >= 1
+    assert reg.get("adaptive.steps_down").value >= 1

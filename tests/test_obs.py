@@ -106,6 +106,92 @@ def test_histogram_quantile():
     assert h.quantile(0.99) == 16
 
 
+# ------------------------------------------------- prometheus text format
+def parse_prometheus(text: str) -> dict:
+    """Parse exposition text back into {name: value} / {name{le}: value}."""
+    out = {}
+    for line in text.strip().splitlines():
+        if line.startswith("#"):
+            continue
+        key, val = line.rsplit(" ", 1)
+        out[key] = float(val) if val != "+Inf" else np.inf
+    return out
+
+
+def test_prometheus_name_sanitization():
+    reg = MetricsRegistry()
+    reg.counter("9weird.name-x", "leading digit + punctuation").inc(3)
+    reg.gauge("search.hops:rate").set(1.0)
+    text = reg.to_prometheus()
+    sample = parse_prometheus(text)
+    # leading digit prefixed, dots/dashes → underscore, colon preserved
+    assert sample["_9weird_name_x"] == 3
+    assert "9weird" not in text.replace("_9weird", "")
+    assert sample["search_hops:rate"] == 1.0
+    for line in text.splitlines():
+        if line.startswith("#"):
+            continue
+        name = line.split("{")[0].split(" ")[0]
+        assert __import__("re").fullmatch(r"[a-zA-Z_:][a-zA-Z0-9_:]*", name)
+
+
+def test_prometheus_bucket_sum_count_consistency():
+    reg = MetricsRegistry()
+    h = reg.histogram("lat", "latency", buckets=(0.1, 0.5, 1.0, 5.0))
+    rng = np.random.default_rng(0)
+    vals = rng.uniform(0, 8, 200)
+    h.observe_many(vals)
+    sample = parse_prometheus(reg.to_prometheus())
+    cum = [sample[f'lat_bucket{{le="{e}"}}'] for e in ("0.1", "0.5", "1", "5")]
+    cum.append(sample['lat_bucket{le="+Inf"}'])
+    # cumulative and monotone, +Inf bucket equals _count
+    assert all(a <= b for a, b in zip(cum, cum[1:]))
+    assert cum[-1] == sample["lat_count"] == 200
+    assert sample["lat_sum"] == pytest.approx(vals.sum(), rel=1e-9)
+    # each cumulative bucket matches a direct count of the raw values
+    for edge, c in zip((0.1, 0.5, 1.0, 5.0), cum):
+        assert c == (vals <= edge).sum()
+
+
+def test_prometheus_roundtrip_live_exporter():
+    """Scrape a live exporter over HTTP and parse the body back (satellite)."""
+    import urllib.request
+
+    reg = MetricsRegistry()
+    reg.counter("search.queries", "q").inc(42)
+    reg.histogram("search.hops", "h", buckets=(2, 8)).observe_many([1, 4, 99])
+    with obs.MetricsExporter(reg, port=0) as exp:
+        def fetch(path):
+            with urllib.request.urlopen(f"{exp.url}{path}", timeout=5) as r:
+                return r.status, r.read().decode(), r.headers
+        code, body, headers = fetch("/metrics")
+        assert code == 200
+        assert headers["Content-Type"].startswith("text/plain")
+        sample = parse_prometheus(body)
+        assert sample["search_queries"] == 42
+        assert sample['search_hops_bucket{le="2"}'] == 1
+        assert sample['search_hops_bucket{le="+Inf"}'] == 3
+        assert sample["search_hops_count"] == 3
+        # scrape body == direct export (no transport mangling)
+        assert body == reg.to_prometheus()
+
+        code, body, _ = fetch("/metrics.json")
+        assert code == 200
+        assert json.loads(body)["search.queries"]["value"] == 42
+
+        code, body, _ = fetch("/healthz")
+        assert code == 200 and json.loads(body)["status"] == "ok"
+
+        # no window attached → /debug/telemetry is a 404
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            fetch("/debug/telemetry")
+        assert ei.value.code == 404
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            fetch("/nope")
+        assert ei.value.code == 404
+    assert not exp.running
+
+
 # ------------------------------------------------------------------ tracer
 def test_span_and_trace_file(tmp_path):
     t = Tracer()
@@ -200,9 +286,15 @@ def test_ring_overflow_detected_and_warns(tiny_graph):
         k=5, instrument=True,
     )
     assert int(np.asarray(tele.ring_evictions).sum()) > 0
+    reg = MetricsRegistry()
     with pytest.warns(RuntimeWarning, match="visited-ring overflow"):
-        n = obs.warn_on_ring_overflow(tele, 4)
+        n = obs.warn_on_ring_overflow(tele, 4, registry=reg)
     assert n > 0
+    # satellite (ISSUE 7): overflow is a counter on /metrics, not just stderr
+    assert reg.get("search.ring_overflow_queries").value == n
+    with pytest.warns(RuntimeWarning):
+        obs.warn_on_ring_overflow(tele, 4, registry=reg)
+    assert reg.get("search.ring_overflow_queries").value == 2 * n
 
 
 def test_beam_search_fixed_instrument_identical(tiny_graph):

@@ -68,6 +68,35 @@ def test_generate_shape_contract_eos_and_plain(engine):
     assert eos.logits_last.shape == (2, cfg.vocab_size)
 
 
+def test_rag_splice_invalid_ids_pad_not_doc0():
+    """ISSUE 7 satellite: retrieved id -1 must splice a padding block (and
+    count + warn), not silently inject doc 0's content."""
+    from repro import obs
+    from repro.serve.retrieval import RagPipeline
+
+    doc_tokens = np.arange(1, 25, dtype=np.int32).reshape(6, 4)  # no zeros
+    # _splice needs no index/engine — construct the pipeline around stubs
+    pipe = RagPipeline(None, None, doc_tokens, k=2, pad_token=0)
+    prompts = np.full((2, 3), 99, np.int32)
+    ids = np.array([[1, -1], [-1, -1]], np.int32)
+
+    reg = obs.get_registry()
+    reg.reset()
+    with pytest.warns(RuntimeWarning, match="retrieved ids invalid"):
+        out = pipe._splice(prompts, ids)
+    assert out.shape == (2, 2 * 4 + 3)
+    np.testing.assert_array_equal(out[0, :4], doc_tokens[1])  # valid id kept
+    assert (out[0, 4:8] == 0).all()       # invalid → pad block, NOT doc 0
+    assert (out[1, :8] == 0).all()
+    np.testing.assert_array_equal(out[:, 8:], prompts)
+    assert reg.get("rag.invalid_ids").value == 3
+    # a clean batch neither warns nor increments
+    clean = pipe._splice(prompts, np.array([[0, 1], [2, 3]], np.int32))
+    np.testing.assert_array_equal(clean[0, :4], doc_tokens[0])
+    assert reg.get("rag.invalid_ids").value == 3
+    reg.reset()
+
+
 def test_rag_pipeline_end_to_end():
     from repro.core import GateConfig, GateIndex
     from repro.data.synthetic import make_database, make_queries_in_dist
@@ -96,3 +125,20 @@ def test_rag_pipeline_end_to_end():
     assert res.generation.tokens.shape == (2, 4)
     # retrieved ids must be the true-ish neighbors (sanity: in range)
     assert (res.retrieved_ids >= 0).all() and (res.retrieved_ids < 600).all()
+
+    # adaptive wiring (ISSUE 7): a controller forces instrumentation, each
+    # batch lands in its window, and searches run at the controller's rung
+    from repro.obs import AdaptiveController, DEFAULT_LADDER, RollingWindow
+    from repro.obs.registry import MetricsRegistry
+
+    ctl = AdaptiveController(
+        RollingWindow(4), DEFAULT_LADDER, level=1,
+        registry=MetricsRegistry(),
+    )
+    apipe = RagPipeline(idx, eng, doc_tokens, k=2, controller=ctl)
+    assert apipe.instrument
+    assert apipe.search_params() == {"beam_width": 16, "max_hops": 96}
+    res = apipe(queries, prompts, max_new_tokens=2)
+    assert res.telemetry is not None
+    assert len(ctl.window) == 1
+    assert "latency_s" in ctl.window._rows()[0]
