@@ -10,6 +10,12 @@ uninstrumented search program (see benchmarks/common.py).
 telemetry-driven ``AdaptiveController`` serves a mixed easy/OOD query stream
 over the precompiled beam ladder, compared against every fixed rung on the
 *same* stream — the payoff metric for the paper's adaptive-awareness loop.
+
+``--routed`` (default on, ISSUE 8) adds a routed-vs-adaptive section: the
+per-query ``HardnessRouter`` splits every batch of the same stream between
+two precompiled rungs, vs the per-batch controller that charges the whole
+batch the window-average rung.  The section also asserts the routed
+invariant: the jit cache does not grow after ``warmup_router``.
 """
 from __future__ import annotations
 
@@ -28,7 +34,10 @@ from benchmarks.common import (
 )
 from repro import obs
 from repro.graphs.knn import exact_knn, recall_at_k
+from repro.graphs.params import SearchParams
+from repro.graphs.search import search_jit_cache_size
 from repro.obs.adaptive import AdaptiveController, DEFAULT_LADDER
+from repro.obs.router import HardnessRouter
 from repro.obs.window import RollingWindow
 
 PROFILES = {
@@ -44,7 +53,7 @@ PROFILES = {
 
 
 def run(mode: str = "quick", seed: int = 0, instrument: bool = True,
-        adaptive: bool = True):
+        adaptive: bool = True, routed: bool = True):
     setup_observability("qps", trace=instrument)
     results = {}
     first_workload = None
@@ -67,6 +76,12 @@ def run(mode: str = "quick", seed: int = 0, instrument: bool = True,
         )
         print(f"[bench_qps] adaptive: "
               f"{_adaptive_headline(results['adaptive_vs_fixed'])}")
+    if routed and first_workload is not None:
+        results["routed_vs_adaptive"] = measure_routed(
+            first_workload, seed=seed,
+        )
+        print(f"[bench_qps] routed: "
+              f"{_routed_headline(results['routed_vs_adaptive'])}")
     path = save_json("qps", results)
     print(f"[bench_qps] -> {path}")
     return results
@@ -106,8 +121,9 @@ def measure_adaptive(
     """
     stream = _query_stream(w.db, batch, rounds, ood_every, k, seed)
     idx = w.index
+    base = SearchParams(k=k, instrument=True)
     with obs.span("bench.adaptive.warmup", rungs=len(ladder)):
-        idx.warmup_ladder(ladder, batch_size=batch, k=k)
+        idx.warmup_ladder(ladder, batch_size=batch, params=base)
 
     def drive(controller=None, rung=None) -> dict:
         total_s, recalls, beams = 0.0, [], []
@@ -115,8 +131,7 @@ def measure_adaptive(
             r = controller.params if controller is not None else rung
             t0 = time.time()
             res, tele = idx.search(
-                q, k=k, beam_width=r.beam_width, max_hops=r.max_hops,
-                instrument=True, record=False,
+                q, params=r.params(base), telemetry_sink=None
             )
             jax.block_until_ready(res.ids)
             dt = time.time() - t0
@@ -149,6 +164,120 @@ def measure_adaptive(
     }
     out["adaptive"]["ladder_moves"] = len(controller.history)
     return out
+
+
+# ---------------------------------------------- routed vs adaptive (ISSUE 8)
+def measure_routed(
+    w,
+    *,
+    ladder=DEFAULT_LADDER,
+    batch: int = 64,
+    rounds: int = 30,
+    ood_every: int = 3,
+    k: int = 10,
+    seed: int = 0,
+    easy_level: int = 3,
+    hard_level: int = -1,
+) -> dict:
+    """Per-query hardness routing vs the per-batch controller, on the exact
+    stream ``measure_adaptive`` used (same seed ⇒ identical batches).
+
+    The two contenders are timed **interleaved, batch by batch, on the same
+    queries** — a sequentially-measured pair drifts ±30% on a shared CPU
+    (thermal/contention), swamping the effect being measured.  The routed
+    half times the full serving step — entry selection + hardness split +
+    two padded sub-batch searches + host-side scatter-merge — so its QPS
+    charges routing all of its overhead.  Asserts the jit cache does not
+    grow after warmup: routing must be a cache lookup, never a recompile.
+    """
+    stream = _query_stream(w.db, batch, rounds, ood_every, k, seed)
+    idx = w.index
+    base = SearchParams(k=k, instrument=True)
+    router = HardnessRouter(
+        ladder, batch_size=batch, easy_level=easy_level,
+        hard_level=hard_level, min_batches=2, patience=1, cooldown=1,
+        registry=obs.get_registry(),
+    )
+    controller = AdaptiveController(
+        RollingWindow(4), ladder,
+        min_batches=2, patience=1, cooldown=1,
+        registry=obs.get_registry(),
+    )
+    with obs.span("bench.routed.warmup", buckets=len(router.buckets)):
+        idx.warmup_ladder(ladder, batch_size=batch, params=base)
+        idx.warmup_router(router, params=base)
+    cache0 = search_jit_cache_size()
+
+    routed_s = adaptive_s = 0.0
+    recalls, a_recalls, hard_fracs, beams, a_beams = [], [], [], [], []
+    for q, gt, _hard in stream:
+        t0 = time.time()
+        res, report = idx.search_routed(
+            q, router=router, params=base, telemetry_sink=None
+        )
+        routed_s += time.time() - t0   # merged results are host arrays
+        router.step()           # adaptation off the timed path, like adaptive
+        recalls.append(recall_at_k(np.asarray(res.ids), gt, k))
+        frac = report.hard_idx.size / batch
+        hard_fracs.append(frac)
+        beams.append((1 - frac) * router.easy_rung.beam_width
+                     + frac * router.hard_rung.beam_width)
+
+        r = controller.params
+        t0 = time.time()
+        a_res, a_tele = idx.search(
+            q, params=r.params(base), telemetry_sink=None
+        )
+        jax.block_until_ready(a_res.ids)
+        dt = time.time() - t0
+        adaptive_s += dt
+        a_recalls.append(recall_at_k(np.asarray(a_res.ids), gt, k))
+        a_beams.append(r.beam_width)
+        s = obs.summarize(a_tele)
+        s["latency_s"] = dt
+        controller.window.push(s)
+        controller.step()
+    cache_growth = search_jit_cache_size() - cache0
+    assert cache_growth == 0, (
+        f"routing recompiled after warmup ({cache_growth} new programs)"
+    )
+    return {
+        "stream": {"batch": batch, "rounds": rounds, "ood_every": ood_every},
+        "routed": {
+            "qps": rounds * batch / routed_s,
+            f"recall@{k}": float(np.mean(recalls)),
+            "mean_hard_frac": float(np.mean(hard_fracs)),
+            "mean_beam_width": float(np.mean(beams)),
+            "easy_beam_width": router.easy_rung.beam_width,
+            "hard_beam_width": router.hard_rung.beam_width,
+            "frac_moves": len(router.history_moves),
+            "jit_cache_growth": cache_growth,
+        },
+        "adaptive": {
+            "qps": rounds * batch / adaptive_s,
+            f"recall@{k}": float(np.mean(a_recalls)),
+            "mean_beam_width": float(np.mean(a_beams)),
+            "ladder_moves": len(controller.history),
+        },
+    }
+
+
+def _routed_headline(res: dict) -> str:
+    ro = res["routed"]
+    rk = next(key for key in ro if key.startswith("recall@"))
+    line = (
+        f"{rk}={ro[rk]:.3f} at {ro['qps']:.0f} qps "
+        f"(mean beam {ro['mean_beam_width']:.1f}, "
+        f"hard_frac {ro['mean_hard_frac']:.2f}, "
+        f"cache growth {ro['jit_cache_growth']})"
+    )
+    ad = res.get("adaptive")
+    if ad:
+        line += (
+            f" vs per-batch adaptive {ad[rk]:.3f} at {ad['qps']:.0f} qps "
+            f"({ro['qps'] / ad['qps']:.2f}x)"
+        )
+    return line
 
 
 def _adaptive_headline(res: dict) -> str:
@@ -201,5 +330,8 @@ if __name__ == "__main__":
                     help="skip telemetry collection (pure QPS run)")
     ap.add_argument("--no-adaptive", dest="adaptive", action="store_false",
                     help="skip the adaptive-vs-fixed serving comparison")
+    ap.add_argument("--no-routed", dest="routed", action="store_false",
+                    help="skip the routed-vs-adaptive serving comparison")
     args = ap.parse_args()
-    run(args.mode, instrument=args.instrument, adaptive=args.adaptive)
+    run(args.mode, instrument=args.instrument, adaptive=args.adaptive,
+        routed=args.routed)

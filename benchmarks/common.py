@@ -45,6 +45,7 @@ from repro.data.synthetic import (
 )
 from repro.graphs.knn import exact_knn, recall_at_k
 from repro.graphs.nsg import build_nsg
+from repro.graphs.params import SearchParams
 from repro.graphs.search import batched_search
 
 OUT_DIR = os.environ.get("BENCH_OUT", "experiments/bench")
@@ -134,9 +135,9 @@ def measure_entry_strategy(
     entries = jnp.asarray(entries_fn(w.eval_q))
     for bw in beam_widths:
         max_hops = max(4 * bw, 64)
+        sp = SearchParams(k=max(k, 10), beam_width=bw, max_hops=max_hops)
         fn = lambda: batched_search(
-            dev["db"], dev["nbrs"], dev["q"], entries,
-            beam_width=bw, max_hops=max_hops, k=max(k, 10),
+            dev["db"], dev["nbrs"], dev["q"], entries, sp,
         )
         res = fn()
         jax.block_until_ready(res.ids)
@@ -163,8 +164,7 @@ def measure_entry_strategy(
         if instrument:
             _, tele = batched_search(
                 dev["db"], dev["nbrs"], dev["q"], entries,
-                beam_width=bw, max_hops=max_hops, k=max(k, 10),
-                instrument=True,
+                sp.replace(instrument=True),
             )
             obs.record_search_telemetry(tele, prefix="bench.search")
             obs.record_search_telemetry(tele, prefix=f"bench.{name}")

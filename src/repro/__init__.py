@@ -1,0 +1,71 @@
+"""repro — GATE (adaptive-awareness graph ANNS) reproduction.
+
+Blessed public surface (ISSUE 8).  Everything here is importable directly
+from ``repro``:
+
+    from repro import GateIndex, SearchParams, HardnessRouter
+
+``SearchParams`` is the single search-knob object: every search entry point
+(``GateIndex.search`` / ``search_baseline`` / ``search_routed``,
+``batched_search``, ladder rungs, the serving daemon) accepts one.  The
+pre-ISSUE-8 per-kwarg spellings still work through a deprecation shim —
+see docs/api.md for the migration table.
+
+Attribute access is lazy (PEP 562): ``import repro`` stays cheap; jax and
+the heavy submodules load on first use of a symbol that needs them.
+"""
+from __future__ import annotations
+
+import importlib
+
+# name -> (module, attr); the single source of truth for the API surface
+_EXPORTS = {
+    # search configuration + primitives
+    "SearchParams": "repro.graphs.params",
+    "resolve_search_params": "repro.graphs.params",
+    "SearchResult": "repro.graphs.search",
+    "batched_search": "repro.graphs.search",
+    "search_jit_cache_size": "repro.graphs.search",
+    # index
+    "GateConfig": "repro.core.gate_index",
+    "GateIndex": "repro.core.gate_index",
+    "NSG": "repro.graphs.nsg",
+    "build_nsg": "repro.graphs.nsg",
+    # observability + adaptation
+    "AdaptiveController": "repro.obs.adaptive",
+    "DEFAULT_LADDER": "repro.obs.adaptive",
+    "LadderRung": "repro.obs.adaptive",
+    "VotePolicy": "repro.obs.adaptive",
+    "HardnessRouter": "repro.obs.router",
+    "RouteReport": "repro.obs.router",
+    "route_buckets": "repro.obs.router",
+    "RollingWindow": "repro.obs.window",
+    "SearchTelemetry": "repro.obs.telemetry",
+    "registry_sink": "repro.obs.telemetry",
+    "summarize": "repro.obs.telemetry",
+    "MetricsExporter": "repro.obs.exporter",
+    "MetricsRegistry": "repro.obs.registry",
+    "get_registry": "repro.obs.registry",
+    # serving
+    "SearchRequest": "repro.serve.daemon",
+    "ServeDaemon": "repro.serve.daemon",
+    "RagPipeline": "repro.serve.retrieval",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    try:
+        module = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(
+            f"module 'repro' has no attribute {name!r}"
+        ) from None
+    value = getattr(importlib.import_module(module), name)
+    globals()[name] = value  # cache: next access skips __getattr__
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS))

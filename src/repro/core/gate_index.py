@@ -38,13 +38,24 @@ from repro.core.twotower import (
     train_two_tower,
 )
 from repro.graphs.nsg import NSG, build_nsg
+from repro.graphs.params import (
+    SearchParams,
+    resolve_search_params,
+    warn_deprecated_kwarg,
+)
 from repro.graphs.search import SearchResult, batched_search
 from repro.obs import (
     SearchTelemetry,
     record_search_telemetry,
+    registry_sink,
     span,
+    summarize,
     warn_on_ring_overflow,
 )
+
+# "telemetry_sink not passed" marker: the default sink is registry_sink,
+# but an explicit None must mean "no side effects" (old record=False)
+_UNSET = object()
 
 
 @dataclass(frozen=True)
@@ -253,95 +264,292 @@ class GateIndex:
             return entries, nav_hops
         return entries
 
+    def route_signals(self, queries: jax.Array):
+        """Per-query entry ids + hardness, from signals GATE computes anyway.
+
+        Returns ``(entries (B, w), nav_hops (B,), hardness (B,))``, higher
+        hardness = harder.  Flat-score path: hardness combines the negated
+        best two-tower score ``-s1`` (low affinity to *every* hub is the
+        modality-gap / OOD tell) with the top-2 margin ``s2 − s1`` (an
+        ambiguous entry choice marks a query likely to wander,
+        arXiv:2402.04713): ``-s1 + 0.5·(s2 − s1)``.  The score term
+        separates queries that actually need a bigger beam markedly better
+        than the margin alone (AUC 0.70 vs 0.65 against a
+        needs-wide-beam label on mixed in-dist/OOD traffic).  Nav-descent
+        path: the descent length (long walks correlate with poor entries).
+        The scale is irrelevant — the router thresholds on an empirical
+        quantile of recent values.
+
+        Entry ids are identical to ``select_entries`` (``lax.top_k`` and
+        ``argmax`` share first-occurrence tie-breaking), which is what makes
+        routed results bit-identical to unrouted ones at the same rung.
+        """
+        dev = self._device()
+        z_q = query_tower(
+            self.tower_params, self.tower_cfg,
+            jnp.asarray(queries, jnp.float32),
+        )
+        w = self.gcfg.probe_width
+        B = z_q.shape[0]
+        if self.hubs.n <= self.gcfg.flat_score_max:
+            from repro.kernels import ops
+
+            scores = ops.twotower_score(z_q, dev["nav"].reps)
+            m = min(max(w, 2), self.hubs.n)
+            top_s, top_i = jax.lax.top_k(scores, m)
+            hub_local = top_i[:, :w]
+            if m >= 2:
+                hardness = 0.5 * top_s[:, 1] - 1.5 * top_s[:, 0]
+            else:  # single hub: no margin term, only the affinity tell
+                hardness = -top_s[:, 0]
+            nav_hops = jnp.zeros((B,), jnp.int32)
+        else:
+            hub_local, nav_hops = ng.descend(
+                dev["nav"], z_q, probe_width=w, instrument=True
+            )
+            hardness = nav_hops.astype(jnp.float32)
+        return dev["hub_ids"][hub_local], nav_hops, hardness
+
     def warmup_ladder(
         self,
         ladder,
         *,
         batch_size: int,
-        k: int = 10,
-        visited_ring: int = 512,
-        instrument: bool = True,
+        params: Optional[SearchParams] = None,
+        **legacy,
     ) -> int:
         """Precompile one search program per ladder rung (ISSUE 7).
 
-        ``beam_width``/``max_hops`` are static jit arguments, so the adaptive
-        controller's ladder moves would otherwise recompile on first use of
-        each rung — at serving time, under traffic.  One dummy batch per rung
-        here moves every compile to startup; afterwards adaptation is a jit
-        cache lookup (``graphs.search.search_jit_cache_size()`` stays flat).
+        Every ``SearchParams`` field is a static jit argument, so the
+        adaptive controller's ladder moves would otherwise recompile on
+        first use of each rung — at serving time, under traffic.  One dummy
+        batch per rung here moves every compile to startup; afterwards
+        adaptation is a jit cache lookup
+        (``graphs.search.search_jit_cache_size()`` stays flat).
 
+        ``params`` is the base config each rung is applied onto (defaults
+        to ``SearchParams(instrument=True)`` — serving runs instrumented).
         Returns the number of rungs warmed.  ``batch_size`` must match the
         serving batch shape (shape changes also recompile).
         """
+        base = resolve_search_params(
+            "GateIndex.warmup_ladder", params, legacy,
+            default=SearchParams(instrument=True),
+        )
         d = self.db.shape[1]
         dummy = np.zeros((batch_size, d), self.db.dtype)
         with span("gate.warmup_ladder", rungs=len(ladder),
                   batch_size=batch_size):
             for rung in ladder:
-                out = self.search(
-                    dummy, k=k, beam_width=rung.beam_width,
-                    max_hops=rung.max_hops, visited_ring=visited_ring,
-                    instrument=instrument, record=False,
-                )
-                res = out[0] if instrument else out
+                rp = rung.params(base)
+                out = self.search(dummy, params=rp, telemetry_sink=None)
+                res = out[0] if rp.instrument else out
                 jax.block_until_ready(res.ids)
         return len(ladder)
+
+    def warmup_router(
+        self,
+        router,
+        *,
+        params: Optional[SearchParams] = None,
+    ) -> int:
+        """Precompile every (rung, bucket) program the router can dispatch
+        (ISSUE 8): both rungs at every static sub-batch size.  After this,
+        ``search_routed`` never misses the jit cache regardless of how a
+        batch splits.  Returns the number of programs warmed.
+        """
+        base = params if params is not None else SearchParams()
+        rungs = (
+            (router.easy_rung,)
+            if router.easy_rung == router.hard_rung
+            else (router.easy_rung, router.hard_rung)
+        )
+        d = self.db.shape[1]
+        warmed = 0
+        with span("gate.warmup_router", rungs=len(rungs),
+                  buckets=len(router.buckets)):
+            for rung in rungs:
+                sp = router.rung_params(rung, base)
+                for m in router.buckets:
+                    dummy = np.zeros((m, d), self.db.dtype)
+                    res, _ = self.search(dummy, params=sp,
+                                         telemetry_sink=None)
+                    jax.block_until_ready(res.ids)
+                    warmed += 1
+        return warmed
 
     def search(
         self,
         queries: np.ndarray,
-        k: int = 10,
+        k: Optional[int] = None,
         *,
-        beam_width: int = 64,
-        max_hops: int = 256,
-        visited_ring: int = 512,
-        instrument: bool = False,
-        record: bool = True,
+        params: Optional[SearchParams] = None,
+        telemetry_sink=_UNSET,
+        **legacy,
     ):
-        """GATE search.  Returns ``SearchResult``; with ``instrument=True``
-        returns ``(SearchResult, SearchTelemetry)``, records the batch into
-        the default metrics registry (``search.*`` instruments) and warns if
-        the visited ring overflowed (nodes silently re-scored).
+        """GATE search at one ``SearchParams`` config (ISSUE 8 API).
 
-        ``record=False`` keeps the telemetry return but skips the registry /
-        warning side effects — used by ``warmup_ladder`` (dummy batches must
-        not pollute metrics) and by callers that fold telemetry into their
-        own window/registry."""
+        Returns ``SearchResult``; with ``params.instrument=True`` returns
+        ``(SearchResult, SearchTelemetry)`` and hands the telemetry to
+        ``telemetry_sink`` — default :func:`repro.obs.registry_sink`
+        (registry ``search.*`` instruments + ring-overflow warning), or any
+        callable ``sink(tele, *, params, where)``; ``telemetry_sink=None``
+        skips the side effects (used by warmup — dummy batches must not
+        pollute metrics — and by callers folding telemetry into their own
+        window/registry).
+
+        ``k=`` stays as a blessed shortcut overriding ``params.k``.  The
+        pre-ISSUE-8 kwargs (``beam_width=``, ..., ``record=``) keep working
+        through the one-shot deprecation shim (docs/api.md).
+        """
+        if "record" in legacy:
+            record = legacy.pop("record")
+            warn_deprecated_kwarg(
+                "GateIndex.search", "record",
+                "telemetry_sink=None (or leave the default registry sink)",
+            )
+            if telemetry_sink is not _UNSET:
+                raise TypeError(
+                    "pass either telemetry_sink= or the deprecated record=, "
+                    "not both"
+                )
+            telemetry_sink = _UNSET if record else None
+        params = resolve_search_params("GateIndex.search", params, legacy, k=k)
+        sink = registry_sink if telemetry_sink is _UNSET else telemetry_sink
         dev = self._device()
-        if not instrument:
+        if not params.instrument:
             entries = self.select_entries(queries)
             return batched_search(
                 dev["db"], dev["neighbors"], jnp.asarray(queries), entries,
-                beam_width=beam_width, max_hops=max_hops, k=k,
-                visited_ring=visited_ring,
+                params=params,
             )
-        with span("gate.search", queries=len(queries), beam_width=beam_width):
+        with span("gate.search", queries=len(queries),
+                  beam_width=params.beam_width):
             entries, nav_hops = self.select_entries(queries, instrument=True)
             res, tele = batched_search(
                 dev["db"], dev["neighbors"], jnp.asarray(queries), entries,
-                beam_width=beam_width, max_hops=max_hops, k=k,
-                visited_ring=visited_ring, instrument=True,
+                params=params,
             )
         tele = tele._replace(nav_hops=nav_hops)
-        if record:
-            record_search_telemetry(tele)
-            warn_on_ring_overflow(
-                tele, visited_ring, where="GateIndex.search"
-            )
+        if sink is not None:
+            sink(tele, params=params, where="GateIndex.search")
         return res, tele
+
+    def search_routed(
+        self,
+        queries: np.ndarray,
+        k: Optional[int] = None,
+        *,
+        router,
+        params: Optional[SearchParams] = None,
+        telemetry_sink=_UNSET,
+    ):
+        """Per-query hardness-routed search (ISSUE 8 tentpole).
+
+        One entry-selection pass computes entries *and* hardness for the
+        whole batch (``route_signals``); the router splits the batch, each
+        sub-batch is padded to a precompiled bucket size and searched at its
+        side's ladder rung, and results are scatter-merged back into the
+        original query order (host arrays, bit-identical per query to an
+        unrouted search at the same rung).
+
+        Always instruments — per-rung telemetry is what the router learns
+        from.  Returns ``(SearchResult, RouteReport)``; the report carries
+        the merged telemetry, split indices/threshold and per-rung
+        summaries, and has already been fed to ``router.observe`` (routed
+        counters + per-rung windows).  Call ``router.step()`` once per batch
+        to let the split fraction adapt.
+        """
+        from repro.obs.router import RouteReport
+
+        base = resolve_search_params(
+            "GateIndex.search_routed", params, {}, k=k
+        )
+        sink = registry_sink if telemetry_sink is _UNSET else telemetry_sink
+        dev = self._device()
+        qd = jnp.asarray(queries)
+        B = int(qd.shape[0])
+        entries, nav_hops_d, hardness = self.route_signals(queries)
+        nav_hops = np.asarray(nav_hops_d)
+        easy_idx, hard_idx, thr = router.split(np.asarray(hardness))
+        kk = base.k
+        ids = np.full((B, kk), -1, np.int32)
+        dists = np.full((B, kk), np.inf, np.float32)
+        hops = np.zeros((B,), np.int32)
+        evals = np.zeros((B,), np.int32)
+        leaves = {
+            f: np.zeros((B,), np.float32 if f in ("entry_dist",
+                                                  "entry_rank_proxy")
+               else np.int32)
+            for f in SearchTelemetry._fields
+        }
+        summaries = {}
+        padded = {}
+        with span("gate.search_routed", queries=B,
+                  easy=int(easy_idx.size), hard=int(hard_idx.size)):
+            for side, idx, rung in (
+                ("easy", easy_idx, router.easy_rung),
+                ("hard", hard_idx, router.hard_rung),
+            ):
+                n = int(idx.size)
+                if n == 0:
+                    continue
+                m = router.bucket(n)
+                padded[side] = m
+                take = idx if m == n else np.concatenate(
+                    [idx, np.full(m - n, idx[0], idx.dtype)]
+                )
+                tj = jnp.asarray(take, jnp.int32)
+                sub_res, sub_tele = batched_search(
+                    dev["db"], dev["neighbors"], qd[tj], entries[tj],
+                    params=router.rung_params(rung, base),
+                )
+                # a rung narrower than k returns min(beam_width, k) columns;
+                # the remaining merged columns keep the -1 / inf padding
+                w = min(int(sub_res.ids.shape[1]), kk)
+                ids[idx[:, None], np.arange(w)] = np.asarray(
+                    sub_res.ids)[:n, :w]
+                dists[idx[:, None], np.arange(w)] = np.asarray(
+                    sub_res.dists)[:n, :w]
+                hops[idx] = np.asarray(sub_res.hops)[:n]
+                evals[idx] = np.asarray(sub_res.dist_evals)[:n]
+                sub_t = jax.tree.map(lambda a: np.asarray(a)[:n], sub_tele)
+                sub_t = sub_t._replace(nav_hops=nav_hops[idx])
+                for f in SearchTelemetry._fields:
+                    leaves[f][idx] = getattr(sub_t, f)
+                summaries[side] = summarize(sub_t)
+        tele = SearchTelemetry(**leaves)
+        res = SearchResult(ids=ids, dists=dists, hops=hops, dist_evals=evals)
+        report = RouteReport(
+            telemetry=tele, easy_idx=easy_idx, hard_idx=hard_idx,
+            threshold=thr, easy_rung=router.easy_rung,
+            hard_rung=router.hard_rung,
+            easy_summary=summaries.get("easy"),
+            hard_summary=summaries.get("hard"),
+            easy_padded=padded.get("easy", 0),
+            hard_padded=padded.get("hard", 0),
+        )
+        router.observe(report)
+        if sink is not None:
+            sink(tele, params=base, where="GateIndex.search_routed")
+        return res, report
 
     def search_baseline(
         self,
         queries: np.ndarray,
-        k: int = 10,
+        k: Optional[int] = None,
         *,
-        beam_width: int = 64,
-        max_hops: int = 256,
-        visited_ring: int = 512,
+        params: Optional[SearchParams] = None,
         entry: str = "medoid",
-        instrument: bool = False,
+        telemetry_sink=_UNSET,
+        **legacy,
     ):
-        """Underlying-index search without GATE (entry ∈ {medoid, random})."""
+        """Underlying-index search without GATE (entry ∈ {medoid, random});
+        same ``SearchParams`` / ``telemetry_sink`` contract as ``search``
+        (baseline telemetry lands under ``search_baseline.<entry>.*``)."""
+        params = resolve_search_params(
+            "GateIndex.search_baseline", params, legacy, k=k
+        )
         dev = self._device()
         B = len(queries)
         if entry == "medoid":
@@ -355,15 +563,22 @@ class GateIndex:
             raise ValueError(entry)
         out = batched_search(
             dev["db"], dev["neighbors"], jnp.asarray(queries), entries,
-            beam_width=beam_width, max_hops=max_hops, k=k,
-            visited_ring=visited_ring, instrument=instrument,
+            params=params,
         )
-        if instrument:
+        if params.instrument:
             res, tele = out
-            record_search_telemetry(tele, prefix=f"search_baseline.{entry}")
-            warn_on_ring_overflow(
-                tele, visited_ring, where=f"search_baseline({entry})"
-            )
+            if telemetry_sink is _UNSET:
+                record_search_telemetry(
+                    tele, prefix=f"search_baseline.{entry}"
+                )
+                warn_on_ring_overflow(
+                    tele, params.visited_ring,
+                    where=f"search_baseline({entry})",
+                )
+            elif telemetry_sink is not None:
+                telemetry_sink(
+                    tele, params=params, where=f"search_baseline({entry})"
+                )
             return res, tele
         return out
 

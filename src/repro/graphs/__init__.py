@@ -1,0 +1,21 @@
+"""repro.graphs — proximity-graph construction and Algorithm-1 search.
+
+Blessed surface: ``SearchParams`` (the single search-knob object, ISSUE 8),
+``batched_search`` / ``SearchResult`` and the jit-cache probe
+``search_jit_cache_size``.  Graph builders live in ``repro.graphs.nsg`` /
+``repro.graphs.knn``.
+"""
+from repro.graphs.params import SearchParams, resolve_search_params
+from repro.graphs.search import (
+    SearchResult,
+    batched_search,
+    search_jit_cache_size,
+)
+
+__all__ = [
+    "SearchParams",
+    "SearchResult",
+    "batched_search",
+    "resolve_search_params",
+    "search_jit_cache_size",
+]

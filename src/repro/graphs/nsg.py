@@ -22,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.graphs.knn import exact_knn, knn_graph, medoid, pairwise_sq_l2
+from repro.graphs.params import SearchParams
 from repro.graphs.search import batched_search
 
 
@@ -143,7 +144,7 @@ def build_nsg(
         ent = entry[: e - s]
         res = batched_search(
             dbj, knnj, qs, ent,
-            beam_width=search_l, max_hops=search_l, k=search_l,
+            SearchParams(k=search_l, beam_width=search_l, max_hops=search_l),
         )
         # pool = search results ∪ own KNN row (dedup; self removed)
         pool = np.concatenate(

@@ -21,11 +21,17 @@ instrumentation costs one transfer per batch.  ``instrument=False`` (the
 default) traces the exact pre-telemetry program: no extra loop state, no
 telemetry ops in the HLO.
 
-``beam_width`` / ``max_hops`` are static: each distinct pair is a separate
-XLA program.  The adaptive controller (``repro.obs.adaptive``) therefore
-moves along a small precompiled *ladder* of pairs — warm every rung once
-(``GateIndex.warmup_ladder``) and adaptation never recompiles;
-``search_jit_cache_size()`` is the assertion hook for that invariant.
+Every search knob is static: a distinct ``SearchParams`` value is a separate
+XLA program.  The adaptive controller (``repro.obs.adaptive``) and the
+per-query hardness router (``repro.obs.router``) therefore move along a
+small precompiled *ladder* of params — warm every rung once
+(``GateIndex.warmup_ladder`` / ``warmup_router``) and adaptation never
+recompiles; ``search_jit_cache_size()`` is the assertion hook for that
+invariant.
+
+``batched_search`` takes the knobs as one ``params=SearchParams(...)``
+object (ISSUE 8); the old per-knob kwargs still work but warn once via the
+deprecation shim in ``repro.graphs.params``.
 """
 from __future__ import annotations
 
@@ -36,6 +42,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.graphs.params import SearchParams, resolve_search_params
 from repro.obs.telemetry import SearchTelemetry
 
 INF = jnp.float32(3.4e38)
@@ -69,8 +76,12 @@ def beam_search_single(
     visited_ring: int = 512,
     instrument: bool = False,
     conv_k: int = 10,
+    metric: str = "l2",
 ):
     """One query's Algorithm-1 beam search.
+
+    ``metric="l2"`` ranks by squared L2; ``"cosine"`` by 1 − cos(v, q)
+    (monotone in angle; vectors need not be pre-normalized).
 
     Returns ``(beam_ids, beam_d, hops, evals)``; with ``instrument=True`` a
     fifth element — a scalar-leaf ``SearchTelemetry`` — is appended.
@@ -79,10 +90,23 @@ def beam_search_single(
     R = neighbors.shape[1]
     qf = q.astype(jnp.float32)
 
-    def dist_to(ids):
-        vecs = db[jnp.maximum(ids, 0)].astype(jnp.float32)
-        d = jnp.sum((vecs - qf) ** 2, axis=-1)
-        return jnp.where(ids < 0, INF, d)
+    if metric == "l2":
+        def dist_to(ids):
+            vecs = db[jnp.maximum(ids, 0)].astype(jnp.float32)
+            d = jnp.sum((vecs - qf) ** 2, axis=-1)
+            return jnp.where(ids < 0, INF, d)
+    elif metric == "cosine":
+        qn = qf / jnp.maximum(jnp.linalg.norm(qf), 1e-9)
+
+        def dist_to(ids):
+            vecs = db[jnp.maximum(ids, 0)].astype(jnp.float32)
+            vecs = vecs / jnp.maximum(
+                jnp.linalg.norm(vecs, axis=-1, keepdims=True), 1e-9
+            )
+            d = 1.0 - vecs @ qn
+            return jnp.where(ids < 0, INF, d)
+    else:
+        raise ValueError(metric)
 
     e_d = dist_to(entry_ids)
     pad = L - entry_ids.shape[0]
@@ -183,54 +207,68 @@ def beam_search_single(
     return beam_ids, beam_d, hops, evals, tele
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=(
-        "beam_width", "max_hops", "k", "visited_ring", "instrument", "conv_k",
-    ),
-)
-def batched_search(
+@functools.partial(jax.jit, static_argnames=("params",))
+def _batched_search(
     db: jax.Array,
     neighbors: jax.Array,
     queries: jax.Array,    # (B, d)
     entry_ids: jax.Array,  # (B, E)
     *,
-    beam_width: int = 64,
-    max_hops: int = 256,
-    k: int = 10,
-    visited_ring: int = 512,
-    instrument: bool = False,
-    conv_k: int = 10,
+    params: SearchParams,
 ):
-    """Batched Algorithm-1 search.
-
-    ``instrument=False`` (default): returns ``SearchResult`` — the HLO is
-    identical to the pre-telemetry program.  ``instrument=True``: returns
-    ``(SearchResult, SearchTelemetry)`` with (B,) telemetry leaves.
-    """
+    """Jitted core: one compiled program per (shapes, ``params``) pair —
+    ``SearchParams`` is frozen/hashable, so it is the whole static key."""
     fn = functools.partial(
         beam_search_single,
         db,
         neighbors,
-        beam_width=beam_width,
-        max_hops=max_hops,
-        visited_ring=visited_ring,
-        instrument=instrument,
-        conv_k=conv_k,
+        beam_width=params.beam_width,
+        max_hops=params.max_hops,
+        visited_ring=params.visited_ring,
+        instrument=params.instrument,
+        conv_k=params.conv_k,
+        metric=params.metric,
     )
-    if not instrument:
+    k = params.k
+    if not params.instrument:
         beam_ids, beam_d, hops, evals = jax.vmap(fn)(queries, entry_ids)
         return SearchResult(beam_ids[:, :k], beam_d[:, :k], hops, evals)
     beam_ids, beam_d, hops, evals, tele = jax.vmap(fn)(queries, entry_ids)
     return SearchResult(beam_ids[:, :k], beam_d[:, :k], hops, evals), tele
 
 
+def batched_search(
+    db: jax.Array,
+    neighbors: jax.Array,
+    queries: jax.Array,    # (B, d)
+    entry_ids: jax.Array,  # (B, E)
+    params: Optional[SearchParams] = None,
+    *,
+    k: Optional[int] = None,
+    **legacy,
+):
+    """Batched Algorithm-1 search.
+
+    Pass the knobs as ``params=SearchParams(...)`` (``k=`` stays as a
+    blessed shortcut overriding ``params.k``).  The pre-ISSUE-8 per-knob
+    kwargs (``beam_width=``, ``max_hops=``, ...) still work but emit a
+    one-shot ``DeprecationWarning`` and count into ``api.deprecated_kwargs``.
+
+    ``params.instrument=False`` (default): returns ``SearchResult`` — the
+    HLO is identical to the pre-telemetry program.  ``instrument=True``:
+    returns ``(SearchResult, SearchTelemetry)`` with (B,) telemetry leaves.
+    """
+    params = resolve_search_params("batched_search", params, legacy, k=k)
+    return _batched_search(db, neighbors, queries, entry_ids, params=params)
+
+
 def search_jit_cache_size() -> int:
     """Number of distinct compiled ``batched_search`` programs (one per
-    (shapes, beam_width, max_hops, …) combination).  The adaptive-serving
-    invariant — ladder moves are jit-cache lookups, never recompiles — is
-    asserted by checking this stays flat across controller steps."""
-    return batched_search._cache_size()
+    (shapes, ``SearchParams``) combination).  The adaptive-serving
+    invariant — ladder moves and routed sub-batches are jit-cache lookups,
+    never recompiles — is asserted by checking this stays flat across
+    controller steps / routed batches."""
+    return _batched_search._cache_size()
 
 
 def beam_search_fixed(

@@ -31,6 +31,9 @@ def main():
     ap.add_argument("--new", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--rag", action="store_true")
+    ap.add_argument("--route", action="store_true",
+                    help="with --rag: per-query hardness routing over the "
+                         "precompiled ladder (repro.obs.router)")
     ap.add_argument("--db-size", type=int, default=4000)
     ap.add_argument("--k", type=int, default=4)
     ap.add_argument("--metrics-port", type=int, default=None,
@@ -82,7 +85,18 @@ def _run(args):
         doc_tokens = rng.integers(
             2, cfg.vocab_size, (args.db_size, 8)
         ).astype(np.int32)
-        pipe = RagPipeline(index, engine, doc_tokens, k=args.k)
+        router = None
+        if args.route:
+            from repro.graphs import SearchParams
+            from repro.obs import DEFAULT_LADDER, HardnessRouter
+
+            router = HardnessRouter(DEFAULT_LADDER, batch_size=args.batch)
+            print("warming router (rungs x buckets) ...", flush=True)
+            index.warmup_router(
+                router, params=SearchParams(k=args.k, instrument=True)
+            )
+        pipe = RagPipeline(index, engine, doc_tokens, k=args.k,
+                           router=router)
         queries = make_queries_in_dist(db, args.batch, seed=args.seed + 2)
         t0 = time.time()
         res = pipe(queries, prompts, max_new_tokens=args.new,

@@ -16,9 +16,20 @@ Online half (ISSUE 7):
   adaptive   — ``AdaptiveController``: telemetry-driven beam/max_hops ladder
                stepping over precompiled static configs
 
+Per-query half (ISSUE 8):
+  router     — ``HardnessRouter``: splits each batch by predicted hardness
+               and runs each side at a different precompiled ladder rung
+               (``GateIndex.search_routed``); ``registry_sink`` is the
+               default ``telemetry_sink`` of the SearchParams API
+
 See docs/observability.md.
 """
-from repro.obs.adaptive import AdaptiveController, DEFAULT_LADDER, LadderRung
+from repro.obs.adaptive import (
+    AdaptiveController,
+    DEFAULT_LADDER,
+    LadderRung,
+    VotePolicy,
+)
 from repro.obs.exporter import MetricsExporter
 from repro.obs.registry import (
     Counter,
@@ -29,10 +40,12 @@ from repro.obs.registry import (
     POW2_BUCKETS,
     get_registry,
 )
+from repro.obs.router import HardnessRouter, RouteReport, route_buckets
 from repro.obs.telemetry import (
     RATIO_BUCKETS,
     SearchTelemetry,
     record_search_telemetry,
+    registry_sink,
     summarize,
     warn_on_ring_overflow,
 )
@@ -44,6 +57,7 @@ __all__ = [
     "Counter",
     "DEFAULT_LADDER",
     "Gauge",
+    "HardnessRouter",
     "Histogram",
     "LATENCY_BUCKETS",
     "LadderRung",
@@ -52,12 +66,16 @@ __all__ = [
     "POW2_BUCKETS",
     "RATIO_BUCKETS",
     "RollingWindow",
+    "RouteReport",
     "SearchTelemetry",
     "Tracer",
+    "VotePolicy",
     "get_registry",
     "get_tracer",
     "read_trace",
     "record_search_telemetry",
+    "registry_sink",
+    "route_buckets",
     "span",
     "summarize",
     "traced",

@@ -28,6 +28,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import List, Optional, Sequence, Tuple
 
+from repro.graphs.params import SearchParams, warn_deprecated_kwarg
 from repro.obs.registry import MetricsRegistry, get_registry
 from repro.obs.window import RollingWindow
 
@@ -39,8 +40,53 @@ class LadderRung:
     beam_width: int
     max_hops: int
 
+    def params(self, base: Optional[SearchParams] = None) -> SearchParams:
+        """This rung applied onto ``base`` (ISSUE 8: rungs carry
+        ``SearchParams``; everything not on the rung — k, metric,
+        instrument, ... — comes from ``base``)."""
+        base = base if base is not None else SearchParams()
+        return base.replace(beam_width=self.beam_width,
+                            max_hops=self.max_hops)
+
     def kwargs(self) -> dict:
+        """Deprecated: use :meth:`params` and pass one ``SearchParams``."""
+        warn_deprecated_kwarg(
+            "LadderRung", "kwargs", "rung.params(base_search_params)"
+        )
         return {"beam_width": self.beam_width, "max_hops": self.max_hops}
+
+
+@dataclass(frozen=True)
+class VotePolicy:
+    """Pure hardness vote from one window snapshot (shared by the
+    per-batch ``AdaptiveController`` and the per-query ``HardnessRouter``).
+
+    ``vote`` returns +1 (more search effort needed), -1 (effort to spare),
+    or 0 (hold) — with no ladder/hysteresis state, so it is reusable for
+    any decision that consumes rolling-window telemetry.
+    """
+
+    proxy_p95_hi: float = 8.0
+    overflow_rate_hi: float = 0.02
+    converged_frac_lo: float = 0.4
+
+    def vote(self, snap: dict) -> int:
+        proxy_p95 = snap.get("entry_rank_proxy_p95")
+        overflow = snap.get("ring_overflow_rate", 0.0)
+        if (proxy_p95 is not None and proxy_p95 > self.proxy_p95_hi) or (
+            overflow > self.overflow_rate_hi
+        ):
+            return +1
+        conv = snap.get("mean_converged_hop")
+        hops = snap.get("mean_hops")
+        if (
+            conv is not None
+            and hops is not None
+            and hops > 0
+            and conv <= self.converged_frac_lo * hops
+        ):
+            return -1
+        return 0
 
 
 # Default effort ladder: ~2x beam per rung, max_hops scaled to keep the
@@ -83,9 +129,11 @@ class AdaptiveController:
         if not 0 <= self.level < len(self.ladder):
             raise ValueError(f"level {self.level} outside ladder "
                              f"[0, {len(self.ladder)})")
-        self.proxy_p95_hi = proxy_p95_hi
-        self.overflow_rate_hi = overflow_rate_hi
-        self.converged_frac_lo = converged_frac_lo
+        self.policy = VotePolicy(
+            proxy_p95_hi=proxy_p95_hi,
+            overflow_rate_hi=overflow_rate_hi,
+            converged_frac_lo=converged_frac_lo,
+        )
         self.patience = patience
         self.cooldown = cooldown
         self.min_batches = min_batches
@@ -102,27 +150,21 @@ class AdaptiveController:
 
     # ---------------------------------------------------------------- policy
     def decide(self, snap: dict) -> int:
-        """Pure vote from one window snapshot: +1 effort up, -1 down, 0 hold.
+        """Vote from one window snapshot: +1 effort up, -1 down, 0 hold.
 
-        Separated from ``step`` so the policy is unit-testable without a
-        window/hysteresis harness.
+        The raw hardness vote lives in :class:`VotePolicy` (unit-testable,
+        reused by ``repro.obs.router``); ``decide`` additionally clamps it
+        to moves the ladder can absorb *before* any ``_publish`` — on a
+        one-rung ladder (or at an edge level) an up/down vote becomes a
+        hold instead of pointing one past the ladder (ISSUE 8 satellite:
+        the gauge published after a move can never be out of range).
         """
-        proxy_p95 = snap.get("entry_rank_proxy_p95")
-        overflow = snap.get("ring_overflow_rate", 0.0)
-        if (proxy_p95 is not None and proxy_p95 > self.proxy_p95_hi) or (
-            overflow > self.overflow_rate_hi
-        ):
-            return +1
-        conv = snap.get("mean_converged_hop")
-        hops = snap.get("mean_hops")
-        if (
-            conv is not None
-            and hops is not None
-            and hops > 0
-            and conv <= self.converged_frac_lo * hops
-        ):
-            return -1
-        return 0
+        vote = self.policy.vote(snap)
+        if vote > 0 and self.level >= len(self.ladder) - 1:
+            return 0
+        if vote < 0 and self.level <= 0:
+            return 0
+        return vote
 
     def step(self) -> LadderRung:
         """Read the window, maybe move one rung; returns the (new) rung."""

@@ -104,6 +104,27 @@ def record_search_telemetry(
     ).inc(int(t.ring_evictions.sum()))
 
 
+def registry_sink(
+    tele: SearchTelemetry,
+    *,
+    params=None,
+    where: str = "search",
+    prefix: str = "search",
+    registry: MetricsRegistry = None,
+) -> None:
+    """The default ``telemetry_sink`` (ISSUE 8): fold the batch into the
+    metrics registry and warn on visited-ring overflow — exactly the old
+    ``GateIndex.search(record=True)`` side effects.
+
+    A *telemetry sink* is any callable ``sink(tele, *, params, where)``;
+    ``GateIndex.search(..., telemetry_sink=None)`` is the old
+    ``record=False`` (telemetry still returned, no side effects).
+    """
+    record_search_telemetry(tele, registry, prefix)
+    ring = getattr(params, "visited_ring", 0) if params is not None else 0
+    warn_on_ring_overflow(tele, ring, where=where, registry=registry)
+
+
 def warn_on_ring_overflow(
     tele: SearchTelemetry,
     visited_ring: int,

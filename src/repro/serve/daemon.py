@@ -28,15 +28,18 @@ import json
 import queue
 import threading
 import time
+import warnings
 from dataclasses import dataclass
 from typing import Optional, Sequence
 
 import numpy as np
 
 from repro.core.gate_index import GateIndex
+from repro.graphs.params import SearchParams
 from repro.obs import (
     AdaptiveController,
     DEFAULT_LADDER,
+    HardnessRouter,
     LATENCY_BUCKETS,
     LadderRung,
     MetricsExporter,
@@ -50,6 +53,9 @@ from repro.obs import (
 class SearchRequest:
     queries: np.ndarray                        # (B, d)
     k: int = 10
+    # per-request search config (ISSUE 8): overrides the daemon's base
+    # SearchParams; the ladder rung / router still set beam_width+max_hops
+    params: Optional[SearchParams] = None
     # RAG: when the daemon has a pipeline and the request carries prompts,
     # the worker generates instead of bare search
     prompt_tokens: Optional[np.ndarray] = None
@@ -92,6 +98,8 @@ class ServeDaemon:
         batch_size: int = 16,
         k: int = 10,
         visited_ring: int = 512,
+        route: bool = False,
+        router_kw: Optional[dict] = None,
         metrics_host: str = "127.0.0.1",
         metrics_port: Optional[int] = None,
         controller_kw: Optional[dict] = None,
@@ -103,9 +111,22 @@ class ServeDaemon:
         self.batch_size = batch_size
         self.k = k
         self.visited_ring = visited_ring
+        # everything except beam_width/max_hops (those come from the rung
+        # or router side); serving always runs instrumented
+        self.base_params = SearchParams(
+            k=k, visited_ring=visited_ring, instrument=True
+        )
         self.window = RollingWindow(window_size)
         self.controller = AdaptiveController(
             self.window, self.ladder, level=level, **(controller_kw or {})
+        )
+        # per-query routing (ISSUE 8) replaces per-batch ladder stepping:
+        # the router owns adaptation (hard_frac), the controller stays idle
+        self.router = (
+            HardnessRouter(self.ladder, batch_size=batch_size,
+                           **(router_kw or {}))
+            if route
+            else None
         )
         if pipeline is not None:
             # the pipeline owns window pushes + controller steps on RAG path
@@ -128,11 +149,16 @@ class ServeDaemon:
         """Warm the ladder, start exporter + worker; returns metrics port."""
         port = self.exporter.start() if self.exporter is not None else None
         if warmup:
-            rungs = self.ladder if self.adaptive else (self.controller.params,)
-            self.index.warmup_ladder(
-                rungs, batch_size=self.batch_size, k=self.k,
-                visited_ring=self.visited_ring,
-            )
+            if self.router is not None:
+                self.index.warmup_router(self.router,
+                                         params=self.base_params)
+            else:
+                rungs = (self.ladder if self.adaptive
+                         else (self.controller.params,))
+                self.index.warmup_ladder(
+                    rungs, batch_size=self.batch_size,
+                    params=self.base_params,
+                )
         self._stop.clear()
         self._worker = threading.Thread(
             target=self._run, name="serve-daemon-worker", daemon=True
@@ -213,17 +239,24 @@ class ServeDaemon:
                 req.queries, req.prompt_tokens,
                 max_new_tokens=req.max_new_tokens,
             )
-        rung = self.controller.params
+        base = req.params if req.params is not None else self.base_params
+        base = base.replace(k=req.k, instrument=True)
         t0 = time.perf_counter()
-        res, tele = self.index.search(
-            req.queries, k=req.k, beam_width=rung.beam_width,
-            max_hops=rung.max_hops, visited_ring=self.visited_ring,
-            instrument=True,
-        )
+        if self.router is not None:
+            res, report = self.index.search_routed(
+                req.queries, router=self.router, params=base
+            )
+            tele = report.telemetry
+        else:
+            res, tele = self.index.search(
+                req.queries, params=self.controller.params.params(base)
+            )
         s = summarize(tele)
         s["latency_s"] = time.perf_counter() - t0
         self.window.push(s)
-        if self.adaptive:
+        if self.router is not None:
+            self.router.step()
+        elif self.adaptive:
             self.controller.step()
         return res, tele
 
@@ -264,8 +297,18 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
                     help="keep serving /metrics this long after the drive "
                          "loop (Ctrl-C exits early)")
     ap.add_argument("--no-adaptive", dest="adaptive", action="store_false")
+    ap.add_argument("--route", action="store_true",
+                    help="per-query hardness routing over the ladder "
+                         "(ISSUE 8) instead of per-batch adaptation")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    # the daemon itself must be fully migrated to the SearchParams API: any
+    # deprecated-kwarg use from within repro.* is a bug here, not a warning
+    # (downstream callers still only warn — the filter is module-scoped)
+    warnings.filterwarnings(
+        "error", category=DeprecationWarning, module=r"repro(\..*)?"
+    )
 
     from repro.data.synthetic import make_queries_in_dist, make_queries_ood
 
@@ -274,7 +317,7 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
     index = _build_tiny_index(args.n, args.profile, args.seed)
     daemon = ServeDaemon(
         index, adaptive=args.adaptive, batch_size=args.batch, k=args.k,
-        metrics_port=args.metrics_port,
+        route=args.route, metrics_port=args.metrics_port,
     )
     port = daemon.start()
     print(f"[daemon] metrics on http://127.0.0.1:{port}/metrics", flush=True)
@@ -286,11 +329,17 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
             maker = make_queries_ood if hard else make_queries_in_dist
             q = maker(index.db, args.batch, seed=args.seed + 10 + i)
             res, _tele = daemon.search(q)
-            rung = daemon.controller.params
+            if daemon.router is not None:
+                r = daemon.router
+                mode = (f"easy={r.easy_rung.beam_width} "
+                        f"hard={r.hard_rung.beam_width} "
+                        f"hard_frac={r.hard_frac:.2f}")
+            else:
+                rung = daemon.controller.params
+                mode = f"beam={rung.beam_width} max_hops={rung.max_hops}"
             print(
                 f"[daemon] batch {i + 1}/{args.batches} "
-                f"({'ood' if hard else 'in-dist'}) "
-                f"beam={rung.beam_width} max_hops={rung.max_hops} "
+                f"({'ood' if hard else 'in-dist'}) {mode} "
                 f"mean_hops={float(np.asarray(res.hops).mean()):.1f}",
                 flush=True,
             )

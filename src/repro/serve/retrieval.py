@@ -21,8 +21,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.gate_index import GateIndex
+from repro.graphs.params import SearchParams
 from repro.obs import (
     AdaptiveController,
+    HardnessRouter,
     SearchTelemetry,
     get_registry,
     span,
@@ -51,16 +53,20 @@ class RagPipeline:
         instrument: bool = False,
         pad_token: int = 0,
         controller: Optional[AdaptiveController] = None,
+        router: Optional[HardnessRouter] = None,
     ):
         self.index = index
         self.engine = engine
         self.doc_tokens = doc_tokens
+        self.base_params = SearchParams(k=k, beam_width=beam_width)
         self.k = k
         self.beam_width = beam_width
-        # the controller needs telemetry to vote on
-        self.instrument = instrument or controller is not None
+        # the controller/router needs telemetry to vote on
+        self.instrument = (instrument or controller is not None
+                           or router is not None)
         self.pad_token = pad_token
         self.controller = controller
+        self.router = router
 
     def _splice(self, prompt_tokens: np.ndarray, ids: np.ndarray) -> np.ndarray:
         """[doc_0 ‖ … ‖ doc_{k-1} ‖ prompt] per request.
@@ -91,11 +97,14 @@ class RagPipeline:
         docs = docs.reshape(B, -1)
         return np.concatenate([docs, prompt_tokens], axis=1).astype(np.int32)
 
-    def search_params(self) -> dict:
-        """Current search kwargs — the controller's rung when adaptive."""
+    def search_params(self) -> SearchParams:
+        """The full ``SearchParams`` the next retrieval runs with — the
+        controller's current rung applied onto the pipeline base when
+        adaptive, else the base itself (ISSUE 8: one object, not kwargs)."""
+        base = self.base_params.replace(instrument=self.instrument)
         if self.controller is not None:
-            return self.controller.params.kwargs()
-        return {"beam_width": self.beam_width}
+            return self.controller.params.params(base)
+        return base
 
     def __call__(
         self,
@@ -105,18 +114,24 @@ class RagPipeline:
         **gen_kw,
     ) -> RagResult:
         tele = None
-        params = self.search_params()
-        with span("rag.retrieve", batch=len(query_vecs), k=self.k, **params):
+        sp = self.search_params()
+        with span("rag.retrieve", batch=len(query_vecs), k=sp.k,
+                  beam_width=sp.beam_width, max_hops=sp.max_hops):
             t0 = time.perf_counter()
-            if self.instrument:
-                res, tele = self.index.search(
-                    query_vecs, k=self.k, instrument=True, **params
+            if self.router is not None:
+                res, report = self.index.search_routed(
+                    query_vecs, router=self.router, params=sp
                 )
+                tele = report.telemetry
+            elif sp.instrument:
+                res, tele = self.index.search(query_vecs, params=sp)
             else:
-                res = self.index.search(query_vecs, k=self.k, **params)
+                res = self.index.search(query_vecs, params=sp)
             ids = np.asarray(res.ids)
             dt = time.perf_counter() - t0
-        if self.controller is not None and tele is not None:
+        if self.router is not None:
+            self.router.step()
+        elif self.controller is not None and tele is not None:
             s = summarize(tele)
             s["latency_s"] = dt
             self.controller.window.push(s)

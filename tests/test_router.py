@@ -1,0 +1,243 @@
+"""Per-query hardness routing (ISSUE 8 tentpole): split/bucket/merge
+correctness, the zero-recompile invariant, and threshold learning."""
+import numpy as np
+import pytest
+
+from repro.graphs.params import SearchParams
+from repro.graphs.search import search_jit_cache_size
+from repro.obs.adaptive import LadderRung
+from repro.obs.registry import MetricsRegistry
+from repro.obs.router import HardnessRouter, route_buckets
+from repro.serve.daemon import _build_tiny_index
+
+LADDER = (LadderRung(8, 32), LadderRung(16, 64), LadderRung(32, 128))
+
+
+@pytest.fixture(scope="module")
+def tiny_index():
+    return _build_tiny_index(400, "sift10m-like", seed=0)
+
+
+def make_router(**kw):
+    kw.setdefault("batch_size", 32)
+    kw.setdefault("registry", MetricsRegistry())
+    return HardnessRouter(LADDER, **kw)
+
+
+# ------------------------------------------------------------------- buckets
+def test_route_buckets_shapes():
+    assert route_buckets(64) == (8, 12, 16, 24, 32, 48, 64)
+    assert route_buckets(64, min_bucket=1) == (
+        1, 2, 3, 4, 6, 8, 12, 16, 24, 32, 48, 64)
+    assert route_buckets(48) == (6, 8, 12, 16, 24, 32, 48)  # batch always last
+    assert route_buckets(1) == (1,)
+    with pytest.raises(ValueError):
+        route_buckets(0)
+
+
+def test_bucket_lookup_and_miss_counter():
+    reg = MetricsRegistry()
+    r = make_router(batch_size=32, registry=reg)
+    assert r.bucket(1) == 4          # min_bucket = 32 // 8
+    assert r.bucket(5) == 6          # 1.5x midpoint bucket
+    assert r.bucket(32) == 32
+    assert reg.get("router.bucket_misses") is None
+    assert r.bucket(40) == 40        # oversized: correct but counted
+    assert reg.get("router.bucket_misses").value == 1
+
+
+# --------------------------------------------------------------------- split
+def test_split_is_quantile_partition():
+    r = make_router(hard_frac=0.25, history=1000)
+    h = np.arange(100, dtype=np.float64)
+    easy, hard, thr = r.split(h)
+    assert hard.size == 25 and easy.size == 75
+    assert np.array_equal(np.sort(np.concatenate([easy, hard])),
+                          np.arange(100))
+    assert (h[hard] > thr).all() and (h[easy] <= thr).all()
+    # history accumulates across batches: a uniformly-hard batch after easy
+    # traffic lands almost entirely above the historical quantile
+    easy2, hard2, _ = r.split(np.full(32, 1000.0))
+    assert hard2.size == 32
+
+
+# ------------------------------------------------- routed search correctness
+def test_routed_bit_identical_to_unrouted_same_rung(tiny_index):
+    """With both sides pinned to the same rung, routing (split + bucket
+    padding + scatter-merge) must be invisible: results bit-identical to
+    one unrouted search of the full batch at that rung."""
+    base = SearchParams(k=5, instrument=True)
+    router = make_router(easy_level=2, hard_level=2)
+    tiny_index.warmup_router(router, params=base)
+    rng = np.random.default_rng(1)
+    q = (tiny_index.db[rng.integers(0, 400, 32)]
+         + 0.05 * rng.standard_normal((32, tiny_index.db.shape[1]))
+         ).astype(np.float32)
+    routed, report = tiny_index.search_routed(
+        q, router=router, params=base, telemetry_sink=None
+    )
+    plain, _ = tiny_index.search(
+        q, params=LADDER[2].params(base), telemetry_sink=None
+    )
+    assert report.easy_idx.size + report.hard_idx.size == 32
+    np.testing.assert_array_equal(np.asarray(routed.ids),
+                                  np.asarray(plain.ids))
+    np.testing.assert_array_equal(np.asarray(routed.dists),
+                                  np.asarray(plain.dists))
+    np.testing.assert_array_equal(np.asarray(routed.hops),
+                                  np.asarray(plain.hops))
+
+
+def test_bucket_padding_never_changes_topk(tiny_index):
+    """Odd split sizes force pad lanes in every bucket; per-query results
+    must not depend on how many pad lanes rode along."""
+    base = SearchParams(k=5, instrument=True)
+    router = make_router(easy_level=0, hard_level=2, hard_frac=0.3)
+    tiny_index.warmup_router(router, params=base)
+    rng = np.random.default_rng(2)
+    for bsz in (5, 11, 17, 29):     # none is a power of two
+        q = rng.standard_normal((bsz, tiny_index.db.shape[1])
+                                ).astype(np.float32)
+        routed, report = tiny_index.search_routed(
+            q, router=router, params=base, telemetry_sink=None
+        )
+        # reference: per-side unrouted searches of the exact sub-batches
+        for idx, rung in ((report.easy_idx, report.easy_rung),
+                          (report.hard_idx, report.hard_rung)):
+            if idx.size == 0:
+                continue
+            ref, _ = tiny_index.search(
+                q[idx], params=rung.params(base), telemetry_sink=None
+            )
+            w = np.asarray(ref.ids).shape[1]
+            np.testing.assert_array_equal(
+                np.asarray(routed.ids)[idx][:, :w], np.asarray(ref.ids)
+            )
+
+
+def test_routed_zero_recompiles_over_100_batches(tiny_index):
+    """Acceptance: 100 routed batches after warmup_router → jit cache flat,
+    whatever way each batch happens to split."""
+    base = SearchParams(k=5, instrument=True)
+    reg = MetricsRegistry()
+    router = make_router(easy_level=0, hard_level=2, registry=reg,
+                         min_batches=1, patience=1, cooldown=0)
+    tiny_index.warmup_router(router, params=base)
+    warmed = search_jit_cache_size()
+    rng = np.random.default_rng(3)
+    for i in range(100):
+        q = (tiny_index.db[rng.integers(0, 400, 32)]
+             + 0.02 * rng.standard_normal((32, tiny_index.db.shape[1]))
+             ).astype(np.float32)
+        tiny_index.search_routed(q, router=router, params=base,
+                                 telemetry_sink=None)
+        router.step()
+    assert search_jit_cache_size() == warmed
+    assert reg.get("search.routed_batches").value == 100
+    easy = reg.get("search.routed_easy_queries").value
+    hard = reg.get("search.routed_hard_queries").value
+    assert easy + hard == 3200
+
+
+def test_route_signals_match_select_entries(tiny_index):
+    import jax.numpy as jnp
+
+    from repro.core.gate_index import query_tower
+    from repro.kernels import ops
+
+    q = np.asarray(tiny_index.db[:16])
+    entries, nav_hops, hardness = tiny_index.route_signals(q)
+    plain = tiny_index.select_entries(q)
+    np.testing.assert_array_equal(np.asarray(entries), np.asarray(plain))
+    assert np.asarray(hardness).shape == (16,)
+    # flat path: -s1 + 0.5*(s2 - s1) over the two-tower hub scores
+    z = query_tower(tiny_index.tower_params, tiny_index.tower_cfg,
+                    jnp.asarray(q, jnp.float32))
+    s = np.sort(np.asarray(
+        ops.twotower_score(z, tiny_index._device()["nav"].reps)), axis=1)
+    want = 0.5 * s[:, -2] - 1.5 * s[:, -1]
+    np.testing.assert_allclose(np.asarray(hardness), want, rtol=1e-5,
+                               atol=1e-5)
+
+
+# -------------------------------------------------------- threshold learning
+def hard_summary():
+    """Push-side keys (summarize() shape); the window snapshot turns these
+    into entry_rank_proxy_p95 / ring_overflow_rate for VotePolicy."""
+    return {"queries": 32, "p95_entry_rank_proxy": 40.0,
+            "ring_overflow_queries": 16, "mean_hops": 40.0,
+            "mean_converged_hop": 39.0}
+
+
+def easy_summary():
+    return {"queries": 32, "p95_entry_rank_proxy": 1.5,
+            "ring_overflow_queries": 0, "mean_hops": 40.0,
+            "mean_converged_hop": 8.0}
+
+
+def push(window, summary, n):
+    for _ in range(n):
+        window.push(summary)
+
+
+def test_router_raises_hard_frac_when_easy_rung_struggles():
+    reg = MetricsRegistry()
+    r = make_router(hard_frac=0.25, min_batches=2, patience=1, cooldown=0,
+                    registry=reg)
+    push(r.easy_window, hard_summary(), 3)   # misrouted-easy signal
+    assert r.decide() == +1
+    assert r.step() == pytest.approx(0.30)
+    assert reg.get("router.frac_up").value == 1
+    assert len(r.easy_window) == 0           # windows reset after a move
+
+
+def test_router_lowers_hard_frac_when_hard_rung_has_headroom():
+    r = make_router(hard_frac=0.25, min_batches=2, patience=1, cooldown=0)
+    push(r.hard_window, easy_summary(), 3)   # hard rung converging early
+    assert r.decide() == -1
+    assert r.step() == pytest.approx(0.20)
+
+
+def test_router_frac_clamped_and_min_batches_gated():
+    r = make_router(hard_frac=0.10, min_frac=0.05, frac_step=0.1,
+                    min_batches=2, patience=1, cooldown=0)
+    push(r.hard_window, easy_summary(), 1)
+    assert r.decide() == 0                   # below min_batches → no vote
+    push(r.hard_window, easy_summary(), 2)
+    assert r.step() == pytest.approx(0.05)   # clamped at min_frac
+    push(r.hard_window, easy_summary(), 3)
+    assert r.step() == pytest.approx(0.05)   # stays clamped
+
+
+def test_router_hysteresis_patience_and_cooldown():
+    r = make_router(hard_frac=0.25, min_batches=1, patience=2, cooldown=2)
+    push(r.easy_window, hard_summary(), 2)
+    assert r.step() == pytest.approx(0.25)   # 1st vote < patience
+    push(r.easy_window, hard_summary(), 2)
+    assert r.step() == pytest.approx(0.30)   # 2nd consecutive vote → move
+    for _ in range(2):                       # cooldown swallows these
+        push(r.easy_window, hard_summary(), 2)
+        assert r.step() == pytest.approx(0.30)
+
+
+# ----------------------------------------------- adaptive one-rung regression
+def test_one_rung_ladder_never_publishes_out_of_range():
+    """ISSUE 8 satellite: on a one-rung ladder an up-vote used to move the
+    published gauge one past the ladder; decide() now clamps first."""
+    from repro.obs.adaptive import AdaptiveController
+    from repro.obs.window import RollingWindow
+
+    reg = MetricsRegistry()
+    c = AdaptiveController(
+        RollingWindow(4), (LadderRung(16, 64),),
+        min_batches=1, patience=1, cooldown=0, registry=reg,
+    )
+    assert c.decide({"ring_overflow_rate": 0.5}) == 0        # clamped up-vote
+    assert c.decide({"mean_hops": 40.0, "mean_converged_hop": 1.0}) == 0
+    for snap in (hard_summary(), easy_summary()):
+        c.window.push(snap)
+        c.step()
+        assert c.level == 0
+        assert reg.get("adaptive.level").value == 0
+        assert reg.get("adaptive.beam_width").value == 16
+    assert len(c.history) == 0

@@ -1,0 +1,180 @@
+"""SearchParams API redesign (ISSUE 8): one frozen knob object everywhere,
+legacy kwargs through a warn-once deprecation shim, telemetry sinks."""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.graphs.knn import knn_graph
+from repro.graphs.params import (
+    SearchParams,
+    reset_deprecation_state,
+    resolve_search_params,
+)
+from repro.graphs.search import batched_search
+from repro.obs.adaptive import LadderRung
+from repro.obs.registry import MetricsRegistry
+import repro.obs.registry as registry_mod
+
+
+@pytest.fixture()
+def fresh_deprecation(monkeypatch):
+    """Isolated warn-once state + registry for deprecation assertions."""
+    reset_deprecation_state()
+    reg = MetricsRegistry()
+    monkeypatch.setattr(registry_mod, "_REGISTRY", reg)
+    yield reg
+    reset_deprecation_state()
+
+
+@pytest.fixture(scope="module")
+def tiny_graph():
+    rng = np.random.default_rng(0)
+    db = rng.standard_normal((200, 8)).astype(np.float32)
+    nbrs = knn_graph(db, 8)
+    q = rng.standard_normal((4, 8)).astype(np.float32)
+    entries = np.zeros((4, 1), np.int32)
+    return db, nbrs, q, entries
+
+
+# ----------------------------------------------------------------- the object
+def test_defaults_frozen_hashable():
+    p = SearchParams()
+    assert (p.k, p.beam_width, p.max_hops) == (10, 64, 256)
+    assert (p.visited_ring, p.metric, p.instrument, p.conv_k) == (
+        512, "l2", False, 10,
+    )
+    with pytest.raises(Exception):  # frozen dataclass
+        p.k = 5
+    assert hash(p) == hash(SearchParams())          # usable as a static jit key
+    assert p.replace(k=5) == SearchParams(k=5)
+    assert p.replace(k=5) is not p
+
+
+def test_validation():
+    with pytest.raises(ValueError):
+        SearchParams(metric="dot")
+    with pytest.raises(ValueError):
+        SearchParams(k=0)
+    with pytest.raises(ValueError):
+        SearchParams(beam_width=-1)
+    with pytest.raises(ValueError):
+        SearchParams(max_hops=True)  # bools are not search budgets
+
+
+# ------------------------------------------------------------------ resolution
+def test_resolve_precedence_and_unknown_keys(fresh_deprecation):
+    base = SearchParams(beam_width=16)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        out = resolve_search_params(
+            "x", base, {"max_hops": 32}, k=3
+        )
+    assert out == SearchParams(k=3, beam_width=16, max_hops=32)
+    with pytest.raises(TypeError, match="record_wrongly"):
+        resolve_search_params("x", None, {"record_wrongly": 1})
+
+
+def test_legacy_kwargs_warn_once_and_count(fresh_deprecation, tiny_graph):
+    reg = fresh_deprecation
+    db, nbrs, q, entries = tiny_graph
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        r1 = batched_search(db, nbrs, q, entries, beam_width=8, max_hops=16)
+        r2 = batched_search(db, nbrs, q, entries, beam_width=8, max_hops=16)
+    dep = [w for w in caught if issubclass(w.category, DeprecationWarning)]
+    # one warning per kwarg name, not per call
+    assert len(dep) == 2
+    assert all("SearchParams" in str(w.message) for w in dep)
+    # ...but the counter sees every legacy use (migration debt on /metrics)
+    assert reg.get("api.deprecated_kwargs").value == 4
+    np.testing.assert_array_equal(np.asarray(r1.ids), np.asarray(r2.ids))
+
+
+def test_params_equals_legacy_spelling(fresh_deprecation, tiny_graph):
+    db, nbrs, q, entries = tiny_graph
+    sp = SearchParams(k=5, beam_width=8, max_hops=16)
+    new = batched_search(db, nbrs, q, entries, sp)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        old = batched_search(db, nbrs, q, entries, k=5, beam_width=8,
+                             max_hops=16)
+    np.testing.assert_array_equal(np.asarray(new.ids), np.asarray(old.ids))
+    np.testing.assert_array_equal(np.asarray(new.dists), np.asarray(old.dists))
+
+
+def test_cosine_metric(tiny_graph):
+    db, nbrs, q, entries = tiny_graph
+    res = batched_search(
+        db, nbrs, q, entries,
+        SearchParams(k=5, beam_width=16, max_hops=64, metric="cosine"),
+    )
+    d = np.asarray(res.dists)
+    ids = np.asarray(res.ids)
+    assert (ids >= 0).all()
+    assert (d >= -1e-5).all() and (d <= 2 + 1e-5).all()  # 1 - cos ∈ [0, 2]
+    # spot-check against brute force for the top-1
+    qn = q / np.linalg.norm(q, axis=1, keepdims=True)
+    dn = db / np.linalg.norm(db, axis=1, keepdims=True)
+    brute = 1.0 - qn @ dn.T
+    np.testing.assert_allclose(
+        d[:, 0], brute[np.arange(4), ids[:, 0]], rtol=1e-4, atol=1e-5
+    )
+
+
+# ------------------------------------------------------------------ LadderRung
+def test_ladder_rung_params_and_deprecated_kwargs(fresh_deprecation):
+    reg = fresh_deprecation
+    rung = LadderRung(beam_width=16, max_hops=96)
+    base = SearchParams(k=3, metric="cosine", instrument=True)
+    sp = rung.params(base)
+    assert (sp.beam_width, sp.max_hops) == (16, 96)
+    assert (sp.k, sp.metric, sp.instrument) == (3, "cosine", True)
+    assert rung.params() == SearchParams(beam_width=16, max_hops=96)
+    with pytest.warns(DeprecationWarning, match="rung.params"):
+        assert rung.kwargs() == {"beam_width": 16, "max_hops": 96}
+    assert reg.get("api.deprecated_kwargs").value == 1
+
+
+# -------------------------------------------------------------- telemetry sink
+def test_gate_search_telemetry_sink_and_record_shim(fresh_deprecation):
+    from repro.serve.daemon import _build_tiny_index
+
+    reg = fresh_deprecation
+    idx = _build_tiny_index(300, "sift10m-like", seed=0)
+    q = np.asarray(idx.db[:4])
+    sp = SearchParams(k=3, beam_width=8, max_hops=32, instrument=True)
+
+    seen = []
+
+    def sink(tele, *, params, where):
+        seen.append((params, where, np.asarray(tele.hops).shape))
+
+    res, tele = idx.search(q, params=sp, telemetry_sink=sink)
+    assert seen == [(sp, "GateIndex.search", (4,))]
+    assert reg.get("search.queries") is None     # custom sink → no registry
+
+    idx.search(q, params=sp)                     # default sink → registry
+    assert reg.get("search.queries").value == 4
+
+    idx.search(q, params=sp, telemetry_sink=None)  # None → no side effects
+    assert reg.get("search.queries").value == 4
+
+    with pytest.warns(DeprecationWarning, match="telemetry_sink"):
+        idx.search(q, params=sp, record=False)   # old spelling still works
+    assert reg.get("search.queries").value == 4
+    with pytest.raises(TypeError, match="not both"):
+        idx.search(q, params=sp, record=True, telemetry_sink=None)
+
+
+# ------------------------------------------------------------- blessed surface
+def test_repro_public_surface():
+    import repro
+
+    for name in ("SearchParams", "GateIndex", "HardnessRouter", "ServeDaemon",
+                 "batched_search", "registry_sink", "search_jit_cache_size"):
+        assert name in repro.__all__
+        assert getattr(repro, name) is not None
+    assert sorted(repro.__all__) == list(repro.__all__)
+    with pytest.raises(AttributeError):
+        repro.not_a_thing

@@ -137,7 +137,9 @@ def test_rag_pipeline_end_to_end():
     )
     apipe = RagPipeline(idx, eng, doc_tokens, k=2, controller=ctl)
     assert apipe.instrument
-    assert apipe.search_params() == {"beam_width": 16, "max_hops": 96}
+    sp = apipe.search_params()  # ISSUE 8: a full SearchParams, not kwargs
+    assert (sp.beam_width, sp.max_hops, sp.k) == (16, 96, 2)
+    assert sp.instrument
     res = apipe(queries, prompts, max_new_tokens=2)
     assert res.telemetry is not None
     assert len(ctl.window) == 1
