@@ -16,6 +16,12 @@ per-query ``HardnessRouter`` splits every batch of the same stream between
 two precompiled rungs, vs the per-batch controller that charges the whole
 batch the window-average rung.  The section also asserts the routed
 invariant: the jit cache does not grow after ``warmup_router``.
+
+``--feedback`` (default on, ISSUE 9) closes the loop: capture a query log
+with shadow-oversearch labels on one stream, fit + calibrate a hardness
+predictor from it offline, hot-swap it into a router, and time
+learned-vs-formula routing interleaved on a fresh mixed stream — with the
+reload asserted not to grow the jit cache.
 """
 from __future__ import annotations
 
@@ -53,7 +59,7 @@ PROFILES = {
 
 
 def run(mode: str = "quick", seed: int = 0, instrument: bool = True,
-        adaptive: bool = True, routed: bool = True):
+        adaptive: bool = True, routed: bool = True, feedback: bool = True):
     setup_observability("qps", trace=instrument)
     results = {}
     first_workload = None
@@ -82,6 +88,12 @@ def run(mode: str = "quick", seed: int = 0, instrument: bool = True,
         )
         print(f"[bench_qps] routed: "
               f"{_routed_headline(results['routed_vs_adaptive'])}")
+    if feedback and first_workload is not None:
+        results["learned_vs_formula"] = measure_feedback(
+            first_workload, seed=seed,
+        )
+        print(f"[bench_qps] feedback: "
+              f"{_feedback_headline(results['learned_vs_formula'])}")
     path = save_json("qps", results)
     print(f"[bench_qps] -> {path}")
     return results
@@ -262,6 +274,119 @@ def measure_routed(
     }
 
 
+# --------------------------------------------- learned vs formula (ISSUE 9)
+def measure_feedback(
+    w,
+    *,
+    ladder=DEFAULT_LADDER,
+    batch: int = 64,
+    capture_rounds: int = 12,
+    rounds: int = 24,
+    ood_every: int = 3,
+    k: int = 10,
+    seed: int = 0,
+    easy_level: int = 3,
+    hard_level: int = -1,
+) -> dict:
+    """The closed feedback loop, end to end (ISSUE 9 acceptance drive):
+
+      1. capture — formula-routed serving over a mixed stream, query log +
+         shadow-oversearch "needed wide beam" labels on every batch
+      2. learn   — fit a hardness predictor and calibrate ``hard_frac``
+         from the captured log, entirely offline
+      3. reload  — hot-swap the predictor into a fresh router (the jit
+         cache must not grow: the predictor scores on the host)
+      4. compare — formula vs learned routing timed interleaved on a fresh
+         stream (same batches, alternating, like ``measure_routed``)
+
+    Adaptation (``router.step``) is off for both contenders so the
+    comparison isolates the split policy: formula hardness at the default
+    ``hard_frac`` vs learned scores at the calibrated fraction.
+    """
+    from repro.feedback import (QueryLog, ShadowOversearch, calibrate,
+                                fit_from_records)
+
+    idx = w.index
+    base = SearchParams(k=k, instrument=True)
+
+    def make_router():
+        return HardnessRouter(
+            ladder, batch_size=batch, easy_level=easy_level,
+            hard_level=hard_level, registry=obs.get_registry(),
+        )
+
+    capture = make_router()
+    with obs.span("bench.feedback.warmup", buckets=len(capture.buckets)):
+        idx.warmup_router(capture, params=base)
+
+    # 1. capture (label every batch: short run, maximum training signal)
+    qlog = QueryLog()                      # in-memory ring, no file
+    shadow = ShadowOversearch(idx, capture, every=1)
+    for q, _gt, _hard in _query_stream(w.db, batch, capture_rounds,
+                                       ood_every, k, seed):
+        idx.search_routed(q, router=capture, params=base,
+                          telemetry_sink=qlog.sink)
+        qlog.annotate_last(needed_wide=shadow.label(q, base))
+    records = qlog.records()
+
+    # 2. learn
+    pred = fit_from_records(records, epochs=200, seed=seed)
+    pred.calibration = calibrate(records)
+
+    # 3. reload — must be invisible to the XLA cache
+    formula = make_router()
+    learned = make_router()
+    cache0 = search_jit_cache_size()
+    learned.load_predictor(pred)
+
+    # 4. compare, interleaved on a fresh stream
+    stream = _query_stream(w.db, batch, rounds, ood_every, k, seed + 1000)
+    sides = {"formula": {"router": formula, "s": 0.0, "rec": [], "frac": []},
+             "learned": {"router": learned, "s": 0.0, "rec": [], "frac": []}}
+    for q, gt, _hard in stream:
+        for side in sides.values():
+            t0 = time.time()
+            res, report = idx.search_routed(
+                q, router=side["router"], params=base, telemetry_sink=None
+            )
+            side["s"] += time.time() - t0    # merged results are host arrays
+            side["rec"].append(recall_at_k(np.asarray(res.ids), gt, k))
+            side["frac"].append(report.hard_idx.size / batch)
+    cache_growth = search_jit_cache_size() - cache0
+    assert cache_growth == 0, (
+        f"predictor reload/serve recompiled ({cache_growth} new programs)"
+    )
+    out = {
+        "stream": {"batch": batch, "rounds": rounds, "ood_every": ood_every,
+                   "capture_rounds": capture_rounds},
+        "fit": dict(pred.metrics, calibration=pred.calibration),
+        "jit_cache_growth": cache_growth,
+    }
+    for name, side in sides.items():
+        out[name] = {
+            "qps": rounds * batch / side["s"],
+            f"recall@{k}": float(np.mean(side["rec"])),
+            "mean_hard_frac": float(np.mean(side["frac"])),
+        }
+    out["learned"]["predictor_version"] = learned.predictor_version
+    out["learned"]["hard_frac"] = learned.hard_frac
+    out["formula"]["hard_frac"] = formula.hard_frac
+    return out
+
+
+def _feedback_headline(res: dict) -> str:
+    le, fo = res["learned"], res["formula"]
+    rk = next(key for key in le if key.startswith("recall@"))
+    return (
+        f"learned {rk}={le[rk]:.3f} at {le['qps']:.0f} qps "
+        f"(hard_frac {le['mean_hard_frac']:.2f}) vs formula "
+        f"{fo[rk]:.3f} at {fo['qps']:.0f} qps "
+        f"(hard_frac {fo['mean_hard_frac']:.2f}) — "
+        f"{le['qps'] / fo['qps']:.2f}x, cache growth "
+        f"{res['jit_cache_growth']}"
+    )
+
+
 def _routed_headline(res: dict) -> str:
     ro = res["routed"]
     rk = next(key for key in ro if key.startswith("recall@"))
@@ -332,6 +457,8 @@ if __name__ == "__main__":
                     help="skip the adaptive-vs-fixed serving comparison")
     ap.add_argument("--no-routed", dest="routed", action="store_false",
                     help="skip the routed-vs-adaptive serving comparison")
+    ap.add_argument("--no-feedback", dest="feedback", action="store_false",
+                    help="skip the learned-vs-formula feedback-loop section")
     args = ap.parse_args()
     run(args.mode, instrument=args.instrument, adaptive=args.adaptive,
-        routed=args.routed)
+        routed=args.routed, feedback=args.feedback)

@@ -50,6 +50,11 @@ _EXPORTS = {
     "SearchRequest": "repro.serve.daemon",
     "ServeDaemon": "repro.serve.daemon",
     "RagPipeline": "repro.serve.retrieval",
+    # feedback loop (ISSUE 9): capture -> replay -> fit -> hot-reload
+    "QueryLog": "repro.feedback.qlog",
+    "ShadowOversearch": "repro.feedback.qlog",
+    "HardnessPredictor": "repro.feedback.fit",
+    "load_predictor": "repro.feedback.fit",
 }
 
 __all__ = sorted(_EXPORTS)

@@ -46,6 +46,7 @@ from repro.graphs.params import (
 from repro.graphs.search import SearchResult, batched_search
 from repro.obs import (
     SearchTelemetry,
+    call_telemetry_sink,
     record_search_telemetry,
     registry_sink,
     span,
@@ -264,11 +265,15 @@ class GateIndex:
             return entries, nav_hops
         return entries
 
-    def route_signals(self, queries: jax.Array):
+    def route_signals(self, queries: jax.Array, *, with_features: bool = False):
         """Per-query entry ids + hardness, from signals GATE computes anyway.
 
         Returns ``(entries (B, w), nav_hops (B,), hardness (B,))``, higher
-        hardness = harder.  Flat-score path: hardness combines the negated
+        hardness = harder.  With ``with_features=True``, additionally returns
+        a ``(B, 3)`` float32 feature matrix ``[-s1, s2-s1, nav_hops]`` (see
+        ``repro.feedback.fit.FEATURE_NAMES``) — the raw signals a learned
+        hardness predictor scores instead of the hand-mixed formula;
+        whichever path didn't run contributes zero columns.  Flat-score path: hardness combines the negated
         best two-tower score ``-s1`` (low affinity to *every* hub is the
         modality-gap / OOD tell) with the top-2 margin ``s2 − s1`` (an
         ambiguous entry choice marks a query likely to wander,
@@ -300,14 +305,25 @@ class GateIndex:
             hub_local = top_i[:, :w]
             if m >= 2:
                 hardness = 0.5 * top_s[:, 1] - 1.5 * top_s[:, 0]
+                margin = top_s[:, 1] - top_s[:, 0]
             else:  # single hub: no margin term, only the affinity tell
                 hardness = -top_s[:, 0]
+                margin = jnp.zeros((B,), jnp.float32)
             nav_hops = jnp.zeros((B,), jnp.int32)
+            features = jnp.stack(
+                [-top_s[:, 0], margin, jnp.zeros((B,), jnp.float32)], axis=1
+            )
         else:
             hub_local, nav_hops = ng.descend(
                 dev["nav"], z_q, probe_width=w, instrument=True
             )
             hardness = nav_hops.astype(jnp.float32)
+            features = jnp.stack(
+                [jnp.zeros((B,), jnp.float32), jnp.zeros((B,), jnp.float32),
+                 nav_hops.astype(jnp.float32)], axis=1
+            )
+        if with_features:
+            return dev["hub_ids"][hub_local], nav_hops, hardness, features
         return dev["hub_ids"][hub_local], nav_hops, hardness
 
     def warmup_ladder(
@@ -469,9 +485,13 @@ class GateIndex:
         dev = self._device()
         qd = jnp.asarray(queries)
         B = int(qd.shape[0])
-        entries, nav_hops_d, hardness = self.route_signals(queries)
+        entries, nav_hops_d, hardness_d, features_d = self.route_signals(
+            queries, with_features=True
+        )
         nav_hops = np.asarray(nav_hops_d)
-        easy_idx, hard_idx, thr = router.split(np.asarray(hardness))
+        hardness = np.asarray(hardness_d)
+        features = np.asarray(features_d)
+        easy_idx, hard_idx, thr = router.split(hardness, features=features)
         kk = base.k
         ids = np.full((B, kk), -1, np.int32)
         dists = np.full((B, kk), np.inf, np.float32)
@@ -528,10 +548,20 @@ class GateIndex:
             hard_summary=summaries.get("hard"),
             easy_padded=padded.get("easy", 0),
             hard_padded=padded.get("hard", 0),
+            hardness=hardness,
+            features=features,
+            scores=getattr(router, "last_scores", None),
+            predictor_version=getattr(router, "predictor_version", None),
+            hard_frac=getattr(router, "hard_frac", None),
         )
         router.observe(report)
         if sink is not None:
-            sink(tele, params=base, where="GateIndex.search_routed")
+            # extras (report/queries) reach only sinks that declare them —
+            # narrow sink(tele, *, params, where) callables keep working
+            call_telemetry_sink(
+                sink, tele, params=base, where="GateIndex.search_routed",
+                report=report, queries=queries,
+            )
         return res, report
 
     def search_baseline(

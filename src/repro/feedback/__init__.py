@@ -1,0 +1,47 @@
+"""repro.feedback — the serve → log → learn → redeploy loop (ISSUE 9).
+
+GATE's premise is that query distributions drift away from the base data;
+PR 8 made the serving stack *react* (per-query hardness routing), but the
+hardness score and the adaptation knobs were still hand-tuned formulas.
+This package closes the loop from real traffic instead:
+
+  qlog    — bounded, thread-safe JSONL query-log writer capturing per-query
+            route signals, the chosen rung, telemetry, latency, and a
+            ground-truth-ish "needed wide beam" label from periodic shadow
+            oversearch (``ShadowOversearch``)
+  replay  — deterministic offline replay of a captured log: re-drive the
+            routing decision (formula or learned) and score it against the
+            shadow labels (counterfactual regret, routed-vs-oracle)
+  fit     — a small JAX-trained logistic/MLP hardness predictor over the
+            logged route signals, plus quantile calibration of ``hard_frac``
+            and the ladder ``VotePolicy`` thresholds from logged rolling
+            windows; artifacts are versioned via ``repro.ckpt``
+
+Serving picks the new predictor up without restarting or recompiling:
+``HardnessRouter.load_predictor`` swaps it atomically (the predictor runs
+*outside* the jitted search, feeding the same bucketed split, so
+``search_jit_cache_size()`` stays flat) and ``ServeDaemon`` exposes
+``POST /reload`` on the metrics server.  See docs/observability.md §9.
+"""
+from repro.feedback.fit import (
+    HardnessPredictor,
+    calibrate,
+    fit_from_records,
+    load_predictor,
+    save_predictor,
+)
+from repro.feedback.qlog import QueryLog, ShadowOversearch
+from repro.feedback.replay import read_log, replay_compare, replay_routing
+
+__all__ = [
+    "HardnessPredictor",
+    "QueryLog",
+    "ShadowOversearch",
+    "calibrate",
+    "fit_from_records",
+    "load_predictor",
+    "read_log",
+    "replay_compare",
+    "replay_routing",
+    "save_predictor",
+]

@@ -19,6 +19,7 @@ legacy keyword warns **once** per (call site, keyword) with a
 from __future__ import annotations
 
 import dataclasses
+import sys
 import warnings
 from dataclasses import dataclass
 from typing import Dict, Optional, Set, Tuple
@@ -83,6 +84,9 @@ def warn_deprecated_kwarg(
     the shimmed API* (this helper → the shimmed API → its caller), so an
     ``error::DeprecationWarning`` filter scoped to ``repro.*`` modules
     catches repro-internal misuse without penalizing downstream users.
+    The message embeds the caller's ``file:line`` so the one-shot warning
+    is actionable from a log even after the warning-dedup machinery has
+    swallowed the repeat occurrences (ISSUE 9 satellite).
     """
     # imported lazily: keeps this module dependency-free so it can be the
     # bottom of the repro.graphs / repro.obs import graph
@@ -96,9 +100,18 @@ def warn_deprecated_kwarg(
     if key in _warned_once:
         return
     _warned_once.add(key)
+    # the frame `stacklevel` frames up is where warnings.warn attributes
+    # the warning: 1 = this helper, so the caller sits at stacklevel - 1
+    # hops above us
+    caller = ""
+    try:
+        frame = sys._getframe(max(stacklevel - 1, 1))
+        caller = f" (called from {frame.f_code.co_filename}:{frame.f_lineno})"
+    except ValueError:
+        pass  # fewer frames than stacklevel (e.g. exec'd top level)
     warnings.warn(
         f"{where}({kwarg}=...) is deprecated; pass {instead} instead "
-        f"(see docs/api.md)",
+        f"(see docs/api.md){caller}",
         DeprecationWarning,
         stacklevel=stacklevel,
     )

@@ -36,6 +36,9 @@ def main():
                          "precompiled ladder (repro.obs.router)")
     ap.add_argument("--db-size", type=int, default=4000)
     ap.add_argument("--k", type=int, default=4)
+    ap.add_argument("--qlog", default=None,
+                    help="with --rag --route: capture a JSONL query log "
+                         "(repro.feedback) for offline replay / fitting")
     ap.add_argument("--metrics-port", type=int, default=None,
                     help="expose /metrics on this port for the run "
                          "(0 = ephemeral)")
@@ -95,8 +98,16 @@ def _run(args):
             index.warmup_router(
                 router, params=SearchParams(k=args.k, instrument=True)
             )
+        qlog = None
+        if args.qlog:
+            if router is None:
+                raise SystemExit("--qlog requires --route (the query log "
+                                 "captures routed decisions)")
+            from repro.feedback import QueryLog
+
+            qlog = QueryLog(args.qlog)
         pipe = RagPipeline(index, engine, doc_tokens, k=args.k,
-                           router=router)
+                           router=router, qlog=qlog)
         queries = make_queries_in_dist(db, args.batch, seed=args.seed + 2)
         t0 = time.time()
         res = pipe(queries, prompts, max_new_tokens=args.new,
@@ -105,6 +116,9 @@ def _run(args):
         print("retrieved ids[0]:", res.retrieved_ids[0])
         print("generated[0]:", res.generation.tokens[0])
         print(f"{args.batch} requests in {dt:.2f}s")
+        if qlog is not None:
+            qlog.close()
+            print(f"query log: {qlog.written} records -> {qlog.path}")
         return
 
     import jax.numpy as jnp

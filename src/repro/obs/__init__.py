@@ -44,6 +44,8 @@ from repro.obs.router import HardnessRouter, RouteReport, route_buckets
 from repro.obs.telemetry import (
     RATIO_BUCKETS,
     SearchTelemetry,
+    call_telemetry_sink,
+    chain_sinks,
     record_search_telemetry,
     registry_sink,
     summarize,
@@ -70,6 +72,8 @@ __all__ = [
     "SearchTelemetry",
     "Tracer",
     "VotePolicy",
+    "call_telemetry_sink",
+    "chain_sinks",
     "get_registry",
     "get_tracer",
     "read_trace",

@@ -148,6 +148,11 @@ class AdaptiveController:
     def params(self) -> LadderRung:
         return self.ladder[self.level]
 
+    def set_policy(self, policy: VotePolicy) -> None:
+        """Swap the vote thresholds (e.g. calibrated ones from
+        ``repro.feedback.fit.calibrate``); hysteresis state is kept."""
+        self.policy = policy
+
     # ---------------------------------------------------------------- policy
     def decide(self, snap: dict) -> int:
         """Vote from one window snapshot: +1 effort up, -1 down, 0 hold.

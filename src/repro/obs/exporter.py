@@ -10,6 +10,9 @@ Endpoints:
   GET /metrics.json     registry snapshot as JSON
   GET /healthz          200 {"status": "ok", "uptime_s": ...}
   GET /debug/telemetry  latest RollingWindow snapshot (404 without a window)
+  POST /reload          invoke the attached ``reload_hook`` (the serving
+                        daemon wires its predictor hot-reload here, ISSUE 9);
+                        404 without a hook, 500 with the error if it raises
 
 No third-party dependencies: ``ThreadingHTTPServer`` + daemon threads means
 scrapes never block search, and a hung scraper can't wedge shutdown.
@@ -20,7 +23,7 @@ import json
 import threading
 import time
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
-from typing import Optional
+from typing import Callable, Optional
 
 from repro.obs.registry import MetricsRegistry, get_registry
 from repro.obs.window import RollingWindow
@@ -38,9 +41,14 @@ class MetricsExporter:
         window: Optional[RollingWindow] = None,
         host: str = "127.0.0.1",
         port: int = 0,
+        reload_hook: Optional[Callable[[], object]] = None,
     ):
         self.registry = registry if registry is not None else get_registry()
         self.window = window
+        # POST /reload target: a zero-arg callable whose (json-able) return
+        # value is echoed in the response body — e.g. the daemon's
+        # reload_predictor().  Settable after construction too.
+        self.reload_hook = reload_hook
         self.host = host
         self.port = port
         self._server: Optional[ThreadingHTTPServer] = None
@@ -64,6 +72,12 @@ class MetricsExporter:
                     exporter._route(self)
                 except BrokenPipeError:
                     pass  # scraper went away mid-response
+
+            def do_POST(self):
+                try:
+                    exporter._route_post(self)
+                except BrokenPipeError:
+                    pass
 
         self._server = ThreadingHTTPServer((self.host, self.port), Handler)
         self._server.daemon_threads = True
@@ -125,7 +139,31 @@ class MetricsExporter:
         else:
             _reply(h, 404, '{"error": "not found", "endpoints": '
                    '["/metrics", "/metrics.json", "/healthz", '
-                   '"/debug/telemetry"]}', "application/json")
+                   '"/debug/telemetry", "POST /reload"]}', "application/json")
+
+    def _route_post(self, h: BaseHTTPRequestHandler) -> None:
+        path = h.path.split("?", 1)[0]
+        if path != "/reload":
+            _reply(h, 404, '{"error": "not found", "endpoints": '
+                   '["POST /reload"]}', "application/json")
+            return
+        hook = self.reload_hook
+        if hook is None:
+            _reply(h, 404, '{"error": "no reload hook attached"}',
+                   "application/json")
+            return
+        try:
+            result = hook()
+        except Exception as e:  # hook failure must not kill the server
+            _reply(h, 500, json.dumps(
+                {"status": "error", "error": f"{type(e).__name__}: {e}"}
+            ), "application/json")
+            return
+        try:
+            body = json.dumps({"status": "ok", "result": result})
+        except TypeError:
+            body = json.dumps({"status": "ok", "result": str(result)})
+        _reply(h, 200, body, "application/json")
 
 
 def _reply(h: BaseHTTPRequestHandler, code: int, body: str,

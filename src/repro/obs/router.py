@@ -26,6 +26,7 @@ hard rung's window shows convergence headroom, less is.
 """
 from __future__ import annotations
 
+import threading
 from collections import deque
 from dataclasses import dataclass
 from typing import Dict, Optional, Sequence, Tuple
@@ -75,6 +76,13 @@ class RouteReport:
     hard_summary: Optional[Dict] = None
     easy_padded: int = 0              # bucket size the easy side ran at
     hard_padded: int = 0
+    # feedback-loop capture (ISSUE 9): the raw signals behind the decision,
+    # so a query log can replay it counterfactually
+    hardness: Optional[np.ndarray] = None    # formula hardness, (B,)
+    features: Optional[np.ndarray] = None    # route feature matrix, (B, F)
+    scores: Optional[np.ndarray] = None      # scores the split used, (B,)
+    predictor_version: Optional[int] = None  # None = formula routing
+    hard_frac: Optional[float] = None        # router.hard_frac at decision
 
 
 class HardnessRouter:
@@ -133,16 +141,32 @@ class HardnessRouter:
         self._streak = 0
         self._cooldown_left = 0
         self.history_moves = []        # applied hard_frac changes
+        self.predictor = None          # learned scorer (feedback loop)
+        self.last_scores: Optional[np.ndarray] = None
+        self._swap_lock = threading.Lock()
         self._publish(threshold=None)
 
     # ----------------------------------------------------------------- split
-    def split(self, hardness: np.ndarray
+    def split(self, hardness: np.ndarray,
+              features: Optional[np.ndarray] = None
               ) -> Tuple[np.ndarray, np.ndarray, float]:
         """Partition a batch: positions with hardness above the current
         quantile threshold go hard.  Higher score = harder; the scale is
         whatever ``route_signals`` emits — only the empirical quantile over
-        recent traffic matters, so no per-dataset calibration knob."""
-        h = np.asarray(hardness, np.float64).reshape(-1)
+        recent traffic matters, so no per-dataset calibration knob.
+
+        With a loaded predictor (see :meth:`load_predictor`) and a
+        ``features`` matrix, the learned score replaces the formula
+        hardness.  The predictor runs in NumPy on the host — this method is
+        never traced, so a predictor swap can't touch the jit cache."""
+        pred = self.predictor    # snapshot: swap is atomic wrt this batch
+        if pred is not None and features is not None:
+            h = np.asarray(
+                pred(np.asarray(features, np.float64)), np.float64
+            ).reshape(-1)
+        else:
+            h = np.asarray(hardness, np.float64).reshape(-1)
+        self.last_scores = h
         self._hist.extend(h.tolist())
         thr = float(
             np.quantile(np.asarray(self._hist), 1.0 - self.hard_frac)
@@ -152,6 +176,54 @@ class HardnessRouter:
         hard_idx = np.nonzero(hard_mask)[0]
         self._publish(threshold=thr)
         return easy_idx, hard_idx, thr
+
+    # ------------------------------------------------------------- predictor
+    @property
+    def predictor_version(self) -> Optional[int]:
+        pred = self.predictor
+        return getattr(pred, "version", None) if pred is not None else None
+
+    def load_predictor(self, predictor, *, adopt_hard_frac: bool = True
+                       ) -> None:
+        """Swap in a learned hardness scorer, atomically and without
+        recompiling: the predictor only ever runs host-side in ``split``,
+        so the precompiled (rung, bucket) programs are untouched.
+
+        The score *scale* changes with the scorer, so the quantile history
+        and the per-rung vote windows are cleared — stale-scale thresholds
+        would misroute the first post-swap batches.  When the predictor
+        carries a calibrated ``hard_frac`` (from ``fit.calibrate``) it is
+        adopted, clamped to this router's [min_frac, max_frac]."""
+        with self._swap_lock:
+            if adopt_hard_frac:
+                frac = (getattr(predictor, "calibration", None)
+                        or {}).get("hard_frac")
+                if frac is not None:
+                    self.hard_frac = min(
+                        max(float(frac), self.min_frac), self.max_frac
+                    )
+            self._hist.clear()
+            self.easy_window.clear()
+            self.hard_window.clear()
+            self._streak = 0
+            self._cooldown_left = self.cooldown
+            self.predictor = predictor
+        if self._reg.enabled:
+            self._reg.counter(
+                "router.predictor_loads", "predictor hot-swaps applied"
+            ).inc()
+            ver = self.predictor_version
+            if ver is not None:
+                self._reg.gauge(
+                    "router.predictor_version",
+                    "version of the active learned hardness predictor",
+                ).set(float(ver))
+        self._publish(threshold=None)
+
+    def set_policy(self, policy: VotePolicy) -> None:
+        """Replace the vote policy (e.g. with calibrated thresholds from
+        ``fit.calibrate``); windows are kept — thresholds, not scales."""
+        self.policy = policy
 
     def bucket(self, n: int) -> int:
         """Smallest precompiled bucket that fits ``n`` lanes.  An oversized

@@ -19,8 +19,9 @@ Field ↔ paper mapping (PAPER.md §5, arXiv:2402.04713, arXiv:2510.22316):
 """
 from __future__ import annotations
 
+import inspect
 import warnings
-from typing import NamedTuple
+from typing import Callable, NamedTuple
 
 import jax
 import numpy as np
@@ -111,6 +112,7 @@ def registry_sink(
     where: str = "search",
     prefix: str = "search",
     registry: MetricsRegistry = None,
+    **_extra,
 ) -> None:
     """The default ``telemetry_sink`` (ISSUE 8): fold the batch into the
     metrics registry and warn on visited-ring overflow — exactly the old
@@ -119,10 +121,49 @@ def registry_sink(
     A *telemetry sink* is any callable ``sink(tele, *, params, where)``;
     ``GateIndex.search(..., telemetry_sink=None)`` is the old
     ``record=False`` (telemetry still returned, no side effects).
+    Sinks that additionally declare ``report=`` / ``queries=`` keywords (or
+    ``**extra``) receive richer context from routed search — see
+    :func:`call_telemetry_sink`; this default one ignores the extras.
     """
     record_search_telemetry(tele, registry, prefix)
     ring = getattr(params, "visited_ring", 0) if params is not None else 0
     warn_on_ring_overflow(tele, ring, where=where, registry=registry)
+
+
+def call_telemetry_sink(sink, tele, *, params=None, where: str = "search",
+                        **extra) -> None:
+    """Invoke a telemetry sink, forwarding only the ``extra`` keywords it
+    actually accepts.  The sink contract is ``sink(tele, *, params, where)``
+    — richer callers (``search_routed`` passing ``report=`` / ``queries=``)
+    must not break narrow sinks, and richer sinks (the query log) should
+    still receive the extras.  Sinks with ``**kwargs`` get everything; on
+    signature-introspection failure the call degrades to the base form."""
+    if sink is None:
+        return
+    if extra:
+        try:
+            sig = inspect.signature(sink)
+            params_ = sig.parameters
+            if not any(p.kind is inspect.Parameter.VAR_KEYWORD
+                       for p in params_.values()):
+                extra = {k: v for k, v in extra.items() if k in params_}
+        except (TypeError, ValueError):
+            extra = {}
+    sink(tele, params=params, where=where, **extra)
+
+
+def chain_sinks(*sinks) -> Callable:
+    """Compose telemetry sinks: each non-None sink runs in order with the
+    same payload (extras filtered per sink via :func:`call_telemetry_sink`).
+    Lets serving keep ``registry_sink`` metrics *and* query-log capture on
+    the one ``telemetry_sink=`` seam."""
+    kept = tuple(s for s in sinks if s is not None)
+
+    def chained(tele, *, params=None, where="search", **extra):
+        for s in kept:
+            call_telemetry_sink(s, tele, params=params, where=where, **extra)
+
+    return chained
 
 
 def warn_on_ring_overflow(

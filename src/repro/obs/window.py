@@ -15,6 +15,7 @@ histograms, which never forget.
 """
 from __future__ import annotations
 
+import json
 import math
 import threading
 from collections import deque
@@ -66,6 +67,34 @@ class RollingWindow:
     @property
     def total_pushed(self) -> int:
         return self._pushed
+
+    # ----------------------------------------------------------- persistence
+    def to_dict(self) -> Dict:
+        """Stable JSON-able form: retained rows + ring geometry.  The
+        round-trip contract (``from_dict(to_dict()).snapshot() ==
+        snapshot()``) is what the feedback loop's calibration relies on —
+        query logs carry windows in this form (ISSUE 9 satellite)."""
+        with self._lock:
+            return {
+                "size": self.size,
+                "total_pushed": self._pushed,
+                "rows": [dict(r) for r in self._ring],
+            }
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "RollingWindow":
+        w = cls(int(d["size"]))
+        for row in d.get("rows", []):
+            w._ring.append(dict(row))
+        w._pushed = int(d.get("total_pushed", len(w._ring)))
+        return w
+
+    def to_json(self, **dumps_kw) -> str:
+        return json.dumps(self.to_dict(), **dumps_kw)
+
+    @classmethod
+    def from_json(cls, s: str) -> "RollingWindow":
+        return cls.from_dict(json.loads(s))
 
     # ------------------------------------------------------------- aggregate
     def _rows(self) -> List[Dict]:

@@ -26,16 +26,19 @@ from __future__ import annotations
 import argparse
 import json
 import queue
+import signal
 import threading
 import time
 import warnings
 from dataclasses import dataclass
-from typing import Optional, Sequence
+from typing import Optional, Sequence, Union
 
 import numpy as np
 
 from repro.core.gate_index import GateIndex
+from repro.feedback.qlog import QueryLog, ShadowOversearch
 from repro.graphs.params import SearchParams
+from repro.graphs.search import search_jit_cache_size
 from repro.obs import (
     AdaptiveController,
     DEFAULT_LADDER,
@@ -44,7 +47,9 @@ from repro.obs import (
     LadderRung,
     MetricsExporter,
     RollingWindow,
+    chain_sinks,
     get_registry,
+    registry_sink,
     summarize,
 )
 
@@ -103,6 +108,10 @@ class ServeDaemon:
         metrics_host: str = "127.0.0.1",
         metrics_port: Optional[int] = None,
         controller_kw: Optional[dict] = None,
+        qlog: Optional[Union[QueryLog, str]] = None,
+        shadow_every: int = 0,
+        predictor_dir: Optional[str] = None,
+        window_log_every: int = 8,
     ):
         self.index = index
         self.pipeline = pipeline
@@ -132,9 +141,26 @@ class ServeDaemon:
             # the pipeline owns window pushes + controller steps on RAG path
             pipeline.controller = self.controller
             pipeline.instrument = True
+        # feedback loop (ISSUE 9): query-log capture + shadow labeling +
+        # predictor hot-reload; all optional, all outside the jitted path
+        self.qlog = QueryLog(qlog) if isinstance(qlog, str) else qlog
+        self.shadow = (
+            ShadowOversearch(index, self.router, every=shadow_every)
+            if shadow_every > 0 and self.router is not None
+            else None
+        )
+        self.predictor_dir = predictor_dir
+        self.window_log_every = max(1, window_log_every)
+        self._routed_sink = (
+            chain_sinks(registry_sink, self.qlog.sink)
+            if self.qlog is not None
+            else registry_sink
+        )
         self.exporter = (
             MetricsExporter(
-                window=self.window, host=metrics_host, port=metrics_port
+                window=self.window, host=metrics_host, port=metrics_port,
+                reload_hook=(self.reload_predictor
+                             if predictor_dir is not None else None),
             )
             if metrics_port is not None
             else None
@@ -143,6 +169,7 @@ class ServeDaemon:
         self._stop = threading.Event()
         self._worker: Optional[threading.Thread] = None
         self._reg = get_registry()
+        self._batches_served = 0
 
     # ------------------------------------------------------------- lifecycle
     def start(self, warmup: bool = True) -> Optional[int]:
@@ -167,12 +194,51 @@ class ServeDaemon:
         return port
 
     def stop(self, timeout: float = 10.0) -> None:
+        """Graceful shutdown (ISSUE 9 satellite): drain the worker, flush +
+        fsync the query-log tail, close the exporter — safe to call twice,
+        and what the CLI's SIGTERM/SIGINT handler runs."""
         self._stop.set()
         if self._worker is not None:
             self._worker.join(timeout)
             self._worker = None
+        if self.qlog is not None:
+            self.qlog.close()
         if self.exporter is not None:
             self.exporter.stop()
+
+    # ------------------------------------------------------------ hot-reload
+    def reload_predictor(self):
+        """Load the latest predictor artifact from ``predictor_dir`` and
+        swap it into the router atomically (the POST /reload hook).
+
+        The predictor scores on the host, outside every jitted program, so
+        the swap can never recompile — asserted by reporting the jit cache
+        size before/after (``jit_cache_growth`` must be 0).
+        """
+        if self.predictor_dir is None:
+            raise RuntimeError("daemon has no predictor_dir configured")
+        if self.router is None:
+            raise RuntimeError("predictor reload requires route=True")
+        from repro.feedback.fit import load_predictor
+
+        cache0 = search_jit_cache_size()
+        pred = load_predictor(self.predictor_dir)
+        self.router.load_predictor(pred)
+        growth = search_jit_cache_size() - cache0
+        if self._reg.enabled:
+            self._reg.counter(
+                "feedback.reloads", "predictor hot-reloads applied"
+            ).inc()
+            self._reg.gauge(
+                "feedback.predictor_version",
+                "version of the served hardness predictor",
+            ).set(float(pred.version))
+        return {
+            "version": pred.version,
+            "model": pred.model,
+            "hard_frac": self.router.hard_frac,
+            "jit_cache_growth": growth,
+        }
 
     def __enter__(self) -> "ServeDaemon":
         self.start()
@@ -244,7 +310,8 @@ class ServeDaemon:
         t0 = time.perf_counter()
         if self.router is not None:
             res, report = self.index.search_routed(
-                req.queries, router=self.router, params=base
+                req.queries, router=self.router, params=base,
+                telemetry_sink=self._routed_sink,
             )
             tele = report.telemetry
         else:
@@ -254,7 +321,17 @@ class ServeDaemon:
         s = summarize(tele)
         s["latency_s"] = time.perf_counter() - t0
         self.window.push(s)
+        self._batches_served += 1
         if self.router is not None:
+            if self.qlog is not None:
+                # the sink logged this batch; attach what's only known now
+                self.qlog.annotate_last(latency_s=s["latency_s"])
+                if self.shadow is not None:
+                    needed = self.shadow.maybe_label(req.queries, base)
+                    if needed is not None:
+                        self.qlog.annotate_last(needed_wide=needed)
+                if self._batches_served % self.window_log_every == 0:
+                    self.qlog.log_window(self.window, name="serve")
             self.router.step()
         elif self.adaptive:
             self.controller.step()
@@ -300,6 +377,17 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
     ap.add_argument("--route", action="store_true",
                     help="per-query hardness routing over the ladder "
                          "(ISSUE 8) instead of per-batch adaptation")
+    ap.add_argument("--qlog", default=None,
+                    help="JSONL query-log path (routed mode; ISSUE 9)")
+    ap.add_argument("--shadow-every", type=int, default=0,
+                    help="shadow-oversearch every Nth batch for "
+                         "needed-wide-beam labels (0 = off)")
+    ap.add_argument("--predictor-dir", default=None,
+                    help="hardness-predictor artifact dir; enables "
+                         "POST /reload and --reload-at")
+    ap.add_argument("--reload-at", type=int, default=0,
+                    help="hot-reload the predictor after this many batches "
+                         "(0 = only via POST /reload)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -318,7 +406,15 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
     daemon = ServeDaemon(
         index, adaptive=args.adaptive, batch_size=args.batch, k=args.k,
         route=args.route, metrics_port=args.metrics_port,
+        qlog=args.qlog, shadow_every=args.shadow_every,
+        predictor_dir=args.predictor_dir,
     )
+    # graceful shutdown on SIGTERM too (CI sends TERM, tty sends INT): the
+    # handler raises so the finally block flushes/fsyncs the query log
+    def _sigterm(signum, frame):
+        raise KeyboardInterrupt
+
+    signal.signal(signal.SIGTERM, _sigterm)
     port = daemon.start()
     print(f"[daemon] metrics on http://127.0.0.1:{port}/metrics", flush=True)
     print("[daemon] ready", flush=True)
@@ -343,6 +439,13 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
                 f"mean_hops={float(np.asarray(res.hops).mean()):.1f}",
                 flush=True,
             )
+            if args.reload_at and (i + 1) == args.reload_at:
+                info = daemon.reload_predictor()
+                print(f"[daemon] predictor reloaded: v{info['version']} "
+                      f"({info['model']}) hard_frac="
+                      f"{info['hard_frac']:.2f}", flush=True)
+                print("[daemon] jit cache growth after reload: "
+                      f"{info['jit_cache_growth']}", flush=True)
         if args.serve_seconds > 0:
             print(f"[daemon] serving /metrics for {args.serve_seconds:.0f}s "
                   f"(Ctrl-C to exit)", flush=True)
@@ -353,6 +456,11 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
         snap = daemon.window.snapshot()
         daemon.stop()
         print("[daemon] final window: " + json.dumps(snap), flush=True)
+        if daemon.qlog is not None:
+            print(f"[daemon] query log: {daemon.qlog.written} records "
+                  f"({daemon.qlog.bytes_written} bytes, "
+                  f"{daemon.qlog.dropped} dropped) -> {daemon.qlog.path}",
+                  flush=True)
         print("[daemon] shut down cleanly", flush=True)
 
 

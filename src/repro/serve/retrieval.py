@@ -26,7 +26,9 @@ from repro.obs import (
     AdaptiveController,
     HardnessRouter,
     SearchTelemetry,
+    chain_sinks,
     get_registry,
+    registry_sink,
     span,
     summarize,
 )
@@ -54,6 +56,7 @@ class RagPipeline:
         pad_token: int = 0,
         controller: Optional[AdaptiveController] = None,
         router: Optional[HardnessRouter] = None,
+        qlog=None,                # optional repro.feedback.QueryLog
     ):
         self.index = index
         self.engine = engine
@@ -67,6 +70,11 @@ class RagPipeline:
         self.pad_token = pad_token
         self.controller = controller
         self.router = router
+        self.qlog = qlog
+        self._routed_sink = (
+            chain_sinks(registry_sink, qlog.sink)
+            if qlog is not None else registry_sink
+        )
 
     def _splice(self, prompt_tokens: np.ndarray, ids: np.ndarray) -> np.ndarray:
         """[doc_0 ‖ … ‖ doc_{k-1} ‖ prompt] per request.
@@ -120,7 +128,8 @@ class RagPipeline:
             t0 = time.perf_counter()
             if self.router is not None:
                 res, report = self.index.search_routed(
-                    query_vecs, router=self.router, params=sp
+                    query_vecs, router=self.router, params=sp,
+                    telemetry_sink=self._routed_sink,
                 )
                 tele = report.telemetry
             elif sp.instrument:
@@ -130,6 +139,8 @@ class RagPipeline:
             ids = np.asarray(res.ids)
             dt = time.perf_counter() - t0
         if self.router is not None:
+            if self.qlog is not None:
+                self.qlog.annotate_last(latency_s=dt)
             self.router.step()
         elif self.controller is not None and tele is not None:
             s = summarize(tele)

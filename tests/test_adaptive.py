@@ -84,6 +84,36 @@ def test_window_empty_snapshot():
     assert snap["batches"] == 0 and snap["queries"] == 0
 
 
+def test_window_json_round_trip_is_stable():
+    """ISSUE 9 satellite: to_json()/from_json() must reconstruct a window
+    whose snapshot is identical — the feedback loop's calibration reads
+    windows back out of query logs in exactly this form."""
+    w = RollingWindow(size=3)
+    for i in range(5):                       # overflow the ring on purpose
+        w.push(make_summary(queries=10 + i, latency_s=0.01 * (i + 1)))
+    w2 = RollingWindow.from_json(w.to_json())
+    assert w2.size == w.size
+    assert w2.total_pushed == w.total_pushed
+    assert len(w2) == len(w)
+    assert w2.snapshot() == w.snapshot()
+    # stable: a second round trip serializes to the identical string
+    assert w2.to_json() == w.to_json()
+    # the revived ring keeps evicting correctly
+    w.push(make_summary(queries=99))
+    w2.push(make_summary(queries=99))
+    assert w2.snapshot() == w.snapshot()
+
+
+def test_window_round_trip_empty_and_partial():
+    for pushes in (0, 2):
+        w = RollingWindow(size=4)
+        for i in range(pushes):
+            w.push(make_summary(queries=i + 1))
+        w2 = RollingWindow.from_dict(w.to_dict())
+        assert w2.snapshot() == w.snapshot()
+        assert w2.total_pushed == pushes
+
+
 # -------------------------------------------------------------- controller
 def controller(reg=None, **kw):
     kw.setdefault("min_batches", 1)

@@ -160,6 +160,77 @@ def test_route_signals_match_select_entries(tiny_index):
                                atol=1e-5)
 
 
+# ------------------------------------------- edge cases (ISSUE 9 satellite)
+def test_all_easy_batch_leaves_hard_side_empty(tiny_index):
+    """A batch entirely below the historical threshold routes 100% easy; the
+    empty hard side must be skipped cleanly (no zero-size bucket search) and
+    the merged result still covers every query."""
+    base = SearchParams(k=5, instrument=True)
+    router = make_router(easy_level=0, hard_level=2, hard_frac=0.25)
+    tiny_index.warmup_router(router, params=base)
+    # saturate the history with hard scores so real queries land below thr
+    router._hist.extend([1e6] * 1000)
+    q = np.asarray(tiny_index.db[:32], np.float32)
+    res, report = tiny_index.search_routed(
+        q, router=router, params=base, telemetry_sink=None
+    )
+    assert report.hard_idx.size == 0
+    assert report.easy_idx.size == 32
+    assert report.hard_summary is None and report.hard_padded == 0
+    assert (np.asarray(res.ids)[:, 0] >= 0).all()
+    ref, _ = tiny_index.search(q, params=LADDER[0].params(base),
+                               telemetry_sink=None)
+    np.testing.assert_array_equal(np.asarray(res.ids)[:, :5],
+                                  np.asarray(ref.ids)[:, :5])
+
+
+def test_all_hard_batch_leaves_easy_side_empty(tiny_index):
+    base = SearchParams(k=5, instrument=True)
+    router = make_router(easy_level=0, hard_level=2, hard_frac=0.25)
+    tiny_index.warmup_router(router, params=base)
+    # saturate the history with trivially-easy scores: thr sits far below
+    # any real hardness, so the whole batch crosses it
+    router._hist.extend([-1e6] * 1000)
+    q = np.asarray(tiny_index.db[:32], np.float32)
+    res, report = tiny_index.search_routed(
+        q, router=router, params=base, telemetry_sink=None
+    )
+    assert report.easy_idx.size == 0
+    assert report.hard_idx.size == 32
+    assert report.easy_summary is None and report.easy_padded == 0
+    ref, _ = tiny_index.search(q, params=LADDER[2].params(base),
+                               telemetry_sink=None)
+    np.testing.assert_array_equal(np.asarray(res.ids),
+                                  np.asarray(ref.ids))
+    np.testing.assert_array_equal(np.asarray(res.dists),
+                                  np.asarray(ref.dists))
+
+
+def test_routed_cosine_scatter_merge_bit_identical(tiny_index):
+    """Satellite: the scatter-merge path is metric-agnostic — under
+    metric="cosine" a routed batch with both sides pinned to one rung is
+    still bit-identical to the unrouted search, in original query order."""
+    base = SearchParams(k=5, metric="cosine", instrument=True)
+    router = make_router(easy_level=1, hard_level=1)
+    tiny_index.warmup_router(router, params=base)
+    rng = np.random.default_rng(7)
+    q = (tiny_index.db[rng.integers(0, 400, 32)]
+         + 0.05 * rng.standard_normal((32, tiny_index.db.shape[1]))
+         ).astype(np.float32)
+    routed, report = tiny_index.search_routed(
+        q, router=router, params=base, telemetry_sink=None
+    )
+    plain, _ = tiny_index.search(q, params=LADDER[1].params(base),
+                                 telemetry_sink=None)
+    assert report.easy_idx.size + report.hard_idx.size == 32
+    np.testing.assert_array_equal(np.asarray(routed.ids),
+                                  np.asarray(plain.ids))
+    np.testing.assert_array_equal(np.asarray(routed.dists),
+                                  np.asarray(plain.dists))
+    np.testing.assert_array_equal(np.asarray(routed.hops),
+                                  np.asarray(plain.hops))
+
+
 # -------------------------------------------------------- threshold learning
 def hard_summary():
     """Push-side keys (summarize() shape); the window snapshot turns these
