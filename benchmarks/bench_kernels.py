@@ -1,6 +1,14 @@
 """Kernel benchmarks: interpret-mode correctness sweep + CPU-path timing +
 TPU roofline estimates per kernel (from tile shapes and the v5e model —
-197 TFLOP/s bf16, 819 GB/s HBM)."""
+197 TFLOP/s bf16, 819 GB/s HBM).
+
+ISSUE 10 adds the bandwidth-optimized search kernels (``gather_rows_dist``,
+the scalar-prefetch in-kernel gather, and its int8 variant
+``gather_rows_dist_q8``) plus an end-to-end xla/fused/fused_q8 serving gate
+(imported from bench_qps).  Their combined results are written to
+``BENCH_kernels.json`` — the artifact CI uploads.  ``--smoke`` shrinks
+every shape for the CI lane.
+"""
 from __future__ import annotations
 
 import argparse
@@ -10,12 +18,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import save_json
+from benchmarks.common import save_json, save_kernels_json
 from repro.kernels import ref
-from repro.kernels.gather_dist import gather_dist
+from repro.kernels.gather_dist import (
+    gather_dist,
+    gather_rows_dist,
+    gather_rows_dist_q8,
+)
 from repro.kernels.l2dist import l2dist
 from repro.kernels.topk import topk_min
 from repro.kernels.twotower_score import twotower_score
+from repro.quant import quantize_db
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
@@ -31,12 +44,13 @@ def _time(fn, *args, repeats=5):
     return (time.time() - t0) / repeats
 
 
-def run(mode: str = "quick"):
+def run(mode: str = "quick", e2e: bool = True):
     rng = np.random.default_rng(0)
     results = {}
+    small = mode in ("quick", "smoke")
 
     # l2dist: Q=1024 C=8192 d=128 (one beam-expansion batch at search scale)
-    Q, C, D = (256, 2048, 128) if mode == "quick" else (1024, 8192, 128)
+    Q, C, D = (256, 2048, 128) if small else (1024, 8192, 128)
     q = jnp.asarray(rng.standard_normal((Q, D)).astype(np.float32))
     c = jnp.asarray(rng.standard_normal((C, D)).astype(np.float32))
     t_ref = _time(lambda a, b: ref.l2dist_ref(a, b), q, c)
@@ -95,6 +109,78 @@ def run(mode: str = "quick"):
         "tpu_bound": "memory",
     }
 
+    # in-kernel gather (ISSUE 10 tentpole): neighbor ids scalar-prefetched
+    # into SMEM steer a per-row HBM→VMEM DMA; distances come out without the
+    # XLA gather's round trip of the gathered block through HBM.
+    N, R, Dg = (2048, 32, 128) if small else (8192, 32, 128)
+    gdb = jnp.asarray(rng.standard_normal((N, Dg)).astype(np.float32))
+    gq = jnp.asarray(rng.standard_normal((Dg,)).astype(np.float32))
+    gids_np = rng.integers(0, N, R).astype(np.int32)
+    gids_np[::7] = -1                   # invalid slots must mask to inf
+    gids = jnp.asarray(gids_np)
+
+    from repro.kernels.gather_dist import INF
+
+    @jax.jit
+    def xla_rows(ids, db, q):           # the matched off-TPU fallback
+        v = db[jnp.maximum(ids, 0)].astype(jnp.float32)
+        d = jnp.sum((v - q) ** 2, axis=-1)
+        return jnp.where(ids >= 0, d, INF)
+
+    t_ref = _time(xla_rows, gids, gdb, gq)
+    got = np.asarray(gather_rows_dist(gids, gdb, gq, interpret=True))
+    want = np.asarray(xla_rows(gids, gdb, gq))
+    # bytes per hop (docs/kernels.md): xla round-trips the gathered (R,d)
+    # block through HBM (read rows + write block + re-read block); fused
+    # reads each row once.  + R*4 for the neighbor-id row either way.
+    bytes_fused = 4.0 * R * Dg + 4.0 * R
+    bytes_xla = 3 * 4.0 * R * Dg + 4.0 * R
+    results["gather_rows_dist"] = {
+        "interpret_ok": bool(np.array_equal(got, want)),  # bitwise, incl. inf
+        "cpu_ref_s": t_ref,
+        "flops": 3.0 * R * Dg,
+        "bytes": bytes_fused,
+        "bytes_xla_formulation": bytes_xla,
+        "hbm_traffic_ratio_vs_xla": bytes_xla / bytes_fused,
+        "tpu_memory_s": bytes_fused / HBM_BW,
+        "tpu_bound": "memory",
+    }
+
+    # int8 variant (ISSUE 10): ~4x fewer HBM bytes per hop at d>=128; the
+    # search path reranks top k*rerank_mult candidates exactly in fp32.
+    qdb = quantize_db(np.asarray(gdb))
+    codes = jnp.asarray(qdb.codes)
+    scale = jnp.asarray(qdb.scale)
+    zero = jnp.asarray(qdb.zero)
+    nb = qdb.n_blocks
+
+    @jax.jit
+    def xla_rows_q8(ids, codes, scale, zero, q):  # matched dequant fallback
+        safe = jnp.maximum(ids, 0)
+        c = codes[safe].astype(jnp.float32).reshape(ids.shape[0], nb, -1)
+        v = (c * scale[safe][:, :, None] + zero[safe][:, :, None]
+             ).reshape(ids.shape[0], -1)
+        d = jnp.sum((v - q) ** 2, axis=-1)
+        return jnp.where(ids >= 0, d, INF)
+
+    t_q8 = _time(xla_rows_q8, gids, codes, scale, zero, gq)
+    got_q8 = np.asarray(
+        gather_rows_dist_q8(gids, codes, scale, zero, gq, interpret=True)
+    )
+    valid = gids_np >= 0
+    rel = np.abs(got_q8[valid] - want[valid]) / np.maximum(want[valid], 1e-6)
+    bytes_q8 = float(R * (codes.shape[1] + 8 * nb) + 4 * R)
+    results["gather_rows_dist_q8"] = {
+        "interpret_ok": bool(np.all(rel < 0.05)),   # approximate by design
+        "max_rel_err_vs_fp32": float(rel.max()),
+        "cpu_ref_s": t_q8,
+        "bytes": bytes_q8,
+        "hbm_traffic_ratio_vs_fused_fp32": bytes_fused / bytes_q8,
+        "quant": {"block": qdb.block, "n_blocks": nb},
+        "tpu_memory_s": bytes_q8 / HBM_BW,
+        "tpu_bound": "memory",
+    }
+
     # twotower_score at entry-selection shapes (B queries x 512 hubs)
     Bq, H, Do = 4096, 512, 128
     zq = jnp.asarray(rng.standard_normal((Bq, Do)).astype(np.float32))
@@ -122,11 +208,44 @@ def run(mode: str = "quick"):
               f"tpu_bound={v.get('tpu_bound')}")
     path = save_json("kernels", results)
     print(f"[bench_kernels] -> {path}")
+
+    # BENCH_kernels.json: the ISSUE 10 acceptance artifact CI uploads —
+    # micro sections for the new kernels + the end-to-end serving gate
+    doc = {
+        "benchmark": "kernels",
+        "source": "bench_kernels",
+        "mode": mode,
+        "micro": {
+            "gather_rows_dist": results["gather_rows_dist"],
+            "gather_rows_dist_q8": results["gather_rows_dist_q8"],
+        },
+    }
+    if e2e:
+        from benchmarks.bench_qps import _kernels_headline, measure_kernels
+        from benchmarks.common import load_workload
+
+        if mode == "smoke":
+            w = load_workload("sift10m-like", 1500, n_train_q=256,
+                              n_eval_q=64, gate_kw={"epochs": 60})
+            doc["e2e"] = measure_kernels(w, batch=32, rounds=4)
+        else:
+            w = load_workload("sift10m-like", 8000)
+            doc["e2e"] = measure_kernels(w)
+        print(f"[bench_kernels] e2e: {_kernels_headline(doc['e2e'])}")
+    kpath = save_kernels_json(doc)
+    print(f"[bench_kernels] -> {kpath}")
     return results
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", default="quick")
+    ap.add_argument("--mode", default="quick",
+                    choices=["smoke", "quick", "full"])
+    ap.add_argument("--smoke", action="store_const", dest="mode",
+                    const="smoke",
+                    help="tiny shapes + small workload for the CI lane")
+    ap.add_argument("--no-e2e", dest="e2e", action="store_false",
+                    help="skip the end-to-end xla/fused/fused_q8 gate "
+                         "(micro sections only)")
     args = ap.parse_args()
-    run(args.mode)
+    run(args.mode, e2e=args.e2e)

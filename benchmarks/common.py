@@ -49,9 +49,31 @@ from repro.graphs.params import SearchParams
 from repro.graphs.search import batched_search
 
 OUT_DIR = os.environ.get("BENCH_OUT", "experiments/bench")
+# the kernel-variant artifact CI uploads (ISSUE 10) — repo-root by default
+# so the workflow picks it up without knowing OUT_DIR
+KERNELS_OUT = os.environ.get("BENCH_KERNELS_OUT", "BENCH_kernels.json")
 
 NSG_KW = dict(R=32, knn_k=32, search_l=64, pool_size=96)
 GATE_KW = dict(n_hubs=64, epochs=300, batch_hubs=64, subgraph_max_nodes=96)
+
+
+def search_config(params: "SearchParams", index: Optional[GateIndex] = None) -> dict:
+    """Result-schema fragment identifying the search configuration (ISSUE 10
+    satellite): every benchmark section that measures QPS/recall records the
+    kernel + quantization config it ran with, so sections are comparable
+    across kernel variants."""
+    cfg = {
+        "kernel": params.kernel,
+        "metric": params.metric,
+        "rerank_mult": params.rerank_mult,
+        "kernel_interpret": params.kernel_interpret,
+    }
+    if params.kernel == "fused_q8" and index is not None \
+            and index.quant is not None:
+        from repro.quant import quant_config
+
+        cfg["quant"] = quant_config(index.quant)
+    return cfg
 
 
 def setup_observability(name: str, trace: bool = True) -> None:
@@ -116,6 +138,7 @@ def measure_entry_strategy(
     repeats: int = 3,
     name: str = "strategy",
     instrument: bool = False,
+    kernel: str = "xla",
 ) -> List[dict]:
     """Sweep beam width; report recall@k/recall@1, QPS, hops per point.
 
@@ -124,20 +147,28 @@ def measure_entry_strategy(
     sweep point, folds its per-query telemetry into the registry
     (``bench.search.hops`` / ``bench.search.dist_evals`` / …, labeled per
     strategy via ``bench.<name>.*``) and attaches the summary to the row.
+
+    ``kernel`` selects the distance kernel (ISSUE 10) — every row records
+    the full ``search_config`` so sweeps run under different kernels stay
+    comparable; ``fused_q8`` reuses the workload index's device codebook.
     """
     dev = {
         "db": jnp.asarray(w.db),
         "nbrs": jnp.asarray(w.nsg.neighbors),
         "q": jnp.asarray(w.eval_q),
     }
+    if kernel == "fused_q8":
+        w.index.ensure_quantized()
     reg = obs.get_registry()
     out = []
     entries = jnp.asarray(entries_fn(w.eval_q))
     for bw in beam_widths:
         max_hops = max(4 * bw, 64)
-        sp = SearchParams(k=max(k, 10), beam_width=bw, max_hops=max_hops)
+        sp = SearchParams(k=max(k, 10), beam_width=bw, max_hops=max_hops,
+                          kernel=kernel)
+        operands = w.index._search_kwargs(sp)
         fn = lambda: batched_search(
-            dev["db"], dev["nbrs"], dev["q"], entries, sp,
+            dev["db"], dev["nbrs"], dev["q"], entries, sp, **operands,
         )
         res = fn()
         jax.block_until_ready(res.ids)
@@ -160,11 +191,12 @@ def measure_entry_strategy(
             "qps": len(w.eval_q) / dt,
             "mean_hops": float(np.asarray(res.hops).mean()),
             "mean_dist_evals": float(np.asarray(res.dist_evals).mean()),
+            "config": search_config(sp, w.index),
         }
         if instrument:
             _, tele = batched_search(
                 dev["db"], dev["nbrs"], dev["q"], entries,
-                sp.replace(instrument=True),
+                sp.replace(instrument=True), **operands,
             )
             obs.record_search_telemetry(tele, prefix="bench.search")
             obs.record_search_telemetry(tele, prefix=f"bench.{name}")
@@ -236,6 +268,19 @@ def achievable_target(
         )
         lo = min(lo, rows[0][key])
     return lo * margin
+
+
+def save_kernels_json(payload) -> str:
+    """Write ``BENCH_kernels.json`` (ISSUE 10 acceptance artifact): kernel
+    equivalence results + the fused_q8-vs-xla QPS/recall gate.  CI uploads
+    this file by name, so it lands at the repo root (override with
+    ``BENCH_KERNELS_OUT``) rather than under OUT_DIR."""
+    d = os.path.dirname(KERNELS_OUT)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    with open(KERNELS_OUT, "w") as f:
+        json.dump(payload, f, indent=1)
+    return KERNELS_OUT
 
 
 def save_json(name: str, payload):

@@ -31,6 +31,9 @@ _EXPORTS = {
     "GateIndex": "repro.core.gate_index",
     "NSG": "repro.graphs.nsg",
     "build_nsg": "repro.graphs.nsg",
+    # int8 codebook for SearchParams(kernel="fused_q8") (ISSUE 10)
+    "QuantizedDb": "repro.quant",
+    "quantize_db": "repro.quant",
     # observability + adaptation
     "AdaptiveController": "repro.obs.adaptive",
     "DEFAULT_LADDER": "repro.obs.adaptive",

@@ -53,6 +53,7 @@ from repro.obs import (
     summarize,
     warn_on_ring_overflow,
 )
+from repro import quant as quantlib
 
 # "telemetry_sink not passed" marker: the default sink is registry_sink,
 # but an explicit None must mean "no side effects" (old record=False)
@@ -103,6 +104,9 @@ class GateIndex:
     nav: ng.NavGraph
     gcfg: GateConfig
     build_report: Dict = field(default_factory=dict)
+    # int8 codebook for SearchParams(kernel="fused_q8") — built lazily by
+    # ensure_quantized() or eagerly at build time; persisted by save()
+    quant: Optional[quantlib.QuantizedDb] = None
 
     # device-side caches
     _dev: Optional[dict] = None
@@ -225,6 +229,70 @@ class GateIndex:
                 "nav": ng.NavGraphDevice.from_host(self.nav),
             }
         return self._dev
+
+    def ensure_quantized(self, block: int = quantlib.BLOCK) -> quantlib.QuantizedDb:
+        """Build (once) and return the int8 codebook for ``fused_q8`` search.
+
+        Deterministic host-side quantization of ``db`` (per-(row, block)
+        affine int8 — ``repro.quant``); the result is cached on the instance
+        and included by ``save()``.  Registers the codebook size as the
+        ``gate.quant_bytes`` gauge so the ~4× footprint win is visible on a
+        ``/metrics`` scrape.
+        """
+        if self.quant is None or self.quant.block != block:
+            with span("gate.quantize_db", n=len(self.db), block=block):
+                self.quant = quantlib.quantize_db(self.db, block=block)
+            if self._dev is not None:
+                self._dev.pop("quant", None)
+            from repro.obs.registry import get_registry
+
+            get_registry().gauge(
+                "gate.quant_bytes", "int8 codebook resident bytes"
+            ).set(quantlib.memory_bytes(self.quant))
+        return self.quant
+
+    def memory_bytes(self) -> Dict[str, int]:
+        """Resident bytes per index component (host copies; the device
+        mirrors in ``_dev`` are the same sizes).  ``quant`` appears once the
+        codebook is built; ``total`` sums what a ``fused_q8`` deployment
+        keeps in HBM (db stays resident for the exact rerank)."""
+        out = {
+            "db": int(self.db.nbytes),
+            "neighbors": int(self.neighbors.nbytes),
+            "nav_reps": int(np.asarray(self.nav.reps).nbytes),
+            "nav_neighbors": int(np.asarray(self.nav.neighbors).nbytes),
+        }
+        if self.quant is not None:
+            out["quant"] = quantlib.memory_bytes(self.quant)
+        out["total"] = sum(out.values())
+        return out
+
+    def _search_kwargs(self, params: SearchParams) -> Dict:
+        """Device operands ``batched_search`` needs for these params, derived
+        deterministically so every call site (direct, routed, warmup) passes
+        the same treedef per ``SearchParams`` value — the jit cache stays
+        warm.  Cosine always gets the precomputed ``1/‖row‖`` cache
+        (ISSUE 10 satellite: never renormalize rows per hop); ``fused_q8``
+        gets the device codebook, quantizing on first use."""
+        dev = self._device()
+        kw: Dict = {}
+        if params.metric == "cosine":
+            if "inv_norms" not in dev:
+                dev["inv_norms"] = 1.0 / jnp.maximum(
+                    jnp.linalg.norm(
+                        dev["db"].astype(jnp.float32), axis=-1
+                    ),
+                    1e-9,
+                )
+            kw["inv_norms"] = dev["inv_norms"]
+        if params.kernel == "fused_q8":
+            if "quant" not in dev:
+                q = self.ensure_quantized()
+                dev["quant"] = quantlib.QuantizedDb(
+                    *(jnp.asarray(a) for a in q)
+                )
+            kw["quant"] = dev["quant"]
+        return kw
 
     def select_entries(self, queries: jax.Array, *, instrument: bool = False):
         """(B, probe_width) base-graph entry ids chosen by the model.
@@ -437,14 +505,14 @@ class GateIndex:
             entries = self.select_entries(queries)
             return batched_search(
                 dev["db"], dev["neighbors"], jnp.asarray(queries), entries,
-                params=params,
+                params=params, **self._search_kwargs(params),
             )
         with span("gate.search", queries=len(queries),
                   beam_width=params.beam_width):
             entries, nav_hops = self.select_entries(queries, instrument=True)
             res, tele = batched_search(
                 dev["db"], dev["neighbors"], jnp.asarray(queries), entries,
-                params=params,
+                params=params, **self._search_kwargs(params),
             )
         tele = tele._replace(nav_hops=nav_hops)
         if sink is not None:
@@ -520,9 +588,10 @@ class GateIndex:
                     [idx, np.full(m - n, idx[0], idx.dtype)]
                 )
                 tj = jnp.asarray(take, jnp.int32)
+                rp = router.rung_params(rung, base)
                 sub_res, sub_tele = batched_search(
                     dev["db"], dev["neighbors"], qd[tj], entries[tj],
-                    params=router.rung_params(rung, base),
+                    params=rp, **self._search_kwargs(rp),
                 )
                 # a rung narrower than k returns min(beam_width, k) columns;
                 # the remaining merged columns keep the -1 / inf padding
@@ -593,7 +662,7 @@ class GateIndex:
             raise ValueError(entry)
         out = batched_search(
             dev["db"], dev["neighbors"], jnp.asarray(queries), entries,
-            params=params,
+            params=params, **self._search_kwargs(params),
         )
         if params.instrument:
             res, tele = out
@@ -622,6 +691,7 @@ class GateIndex:
             "tower_cfg": self.tower_cfg, "gcfg": self.gcfg,
             "nav": (self.nav.neighbors, self.nav.reps, self.nav.start),
             "build_report": self.build_report,
+            "quant": tuple(self.quant) if self.quant is not None else None,
         }
         with open(path, "wb") as f:
             pickle.dump(state, f)
@@ -630,10 +700,12 @@ class GateIndex:
     def load(cls, path: str) -> "GateIndex":
         with open(path, "rb") as f:
             s = pickle.load(f)
+        q = s.get("quant")  # absent in pre-ISSUE-10 pickles
         return cls(
             db=s["db"], neighbors=s["neighbors"], enter_id=s["enter_id"],
             hubs=HubSet(*s["hubs"]),
             tower_params=s["tower_params"], tower_cfg=s["tower_cfg"],
             nav=ng.NavGraph(*s["nav"]), gcfg=s["gcfg"],
             build_report=s["build_report"],
+            quant=quantlib.QuantizedDb(*q) if q is not None else None,
         )

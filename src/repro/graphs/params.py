@@ -26,6 +26,12 @@ from typing import Dict, Optional, Set, Tuple
 
 _METRICS = ("l2", "cosine")
 
+# Distance-kernel variants (ISSUE 10).  "xla" is the plain gather+compute
+# formulation; "fused" DMAs rows in-kernel via scalar prefetch (bit-identical
+# fp32 distances); "fused_q8" reads the int8 codebook (~4× fewer HBM bytes
+# per hop) and exact-reranks the top k·rerank_mult beam slots in fp32.
+_KERNELS = ("xla", "fused", "fused_q8")
+
 # Legacy keyword names resolve_search_params understands, in SearchParams
 # field order.  ``conv_k`` predates the redesign as a kwarg on
 # batched_search; ``k`` is accepted here too for **legacy-dict** resolution
@@ -54,13 +60,21 @@ class SearchParams:
     metric: str = "l2"          # "l2" (squared) or "cosine" (1 - cos)
     instrument: bool = False    # device-side SearchTelemetry on/off
     conv_k: int = 10            # top-k prefix watched for convergence
+    kernel: str = "xla"         # distance kernel: "xla" | "fused" | "fused_q8"
+    rerank_mult: int = 4        # q8 exact-rerank width α: top k·α beam slots
+    kernel_interpret: bool = False  # run Pallas bodies in interpret mode (CPU)
 
     def __post_init__(self):
         if self.metric not in _METRICS:
             raise ValueError(
                 f"metric must be one of {_METRICS}, got {self.metric!r}"
             )
-        for name in ("k", "beam_width", "max_hops", "visited_ring", "conv_k"):
+        if self.kernel not in _KERNELS:
+            raise ValueError(
+                f"kernel must be one of {_KERNELS}, got {self.kernel!r}"
+            )
+        for name in ("k", "beam_width", "max_hops", "visited_ring", "conv_k",
+                     "rerank_mult"):
             v = getattr(self, name)
             if not isinstance(v, (int,)) or isinstance(v, bool) or v < 1:
                 raise ValueError(f"{name} must be a positive int, got {v!r}")

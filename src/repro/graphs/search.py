@@ -65,6 +65,147 @@ def _merge_top_l(ids_a, d_a, exp_a, ids_b, d_b):
     return ids[order][:L], d[order][:L], expanded[order][:L]
 
 
+def _rerank_exact(beam_ids, beam_d, evals, rerank, exact_dist):
+    """q8 epilogue: re-score the first ``rerank`` beam slots (already sorted
+    best-first by approximate distance) with the exact fp32 formulation and
+    re-order.  Invalid (-1) slots score +inf and sink to the back.  Returns
+    the truncated ``(ids, dists)`` plus updated eval count and the number of
+    valid rows re-read (for the bytes_read model)."""
+    cand = beam_ids[:rerank]
+    d_ex = exact_dist(cand)
+    order = jnp.argsort(d_ex)
+    n_valid = jnp.sum((cand >= 0).astype(jnp.int32))
+    return cand[order], d_ex[order], evals + n_valid, n_valid
+
+
+def _make_dist_fns(
+    db, q, *, metric, kernel, kernel_interpret, inv_norms, quant,
+):
+    """Build ``(dist_to, exact_dist, vec_bytes)`` for one query.
+
+    ``dist_to`` is the per-hop distance function the while-loop uses (the
+    approximate q8 one under ``kernel="fused_q8"``); ``exact_dist`` is the
+    fp32 formulation used for entry distances' exactness-insensitive twin and
+    the rerank epilogue; ``vec_bytes`` is the traffic-model bytes per scored
+    row for ``bytes_read`` telemetry.
+
+    Everything query/db-global (query normalization, db inv-norms, TPU lane
+    padding, the q8 query widening) happens HERE, once per search — never
+    inside the hop loop (ISSUE 10 satellite: no per-hop padding or
+    renormalization).
+
+    Kernel dispatch: the Pallas in-kernel-gather bodies run on real TPU or
+    under ``kernel_interpret=True`` (the CPU test path); otherwise ``fused``
+    falls back to the *matched* XLA formulation — same reduction shapes, so
+    fp32 results are bit-identical either way — and ``fused_q8`` to an XLA
+    dequantize-and-score of the same codes.
+    """
+    from repro.kernels.gather_dist import gather_rows_dist, gather_rows_dist_q8
+    from repro.kernels.ops import _on_tpu
+
+    qf = q.astype(jnp.float32)
+    D = db.shape[1]
+    use_pallas = kernel in ("fused", "fused_q8") and (
+        kernel_interpret or _on_tpu()
+    )
+
+    if metric == "cosine":
+        qx = qf / jnp.maximum(jnp.linalg.norm(qf), 1e-9)
+        # precomputed once (or passed in from the index's device cache) —
+        # the old path renormalized every gathered row on every hop
+        inv = inv_norms if inv_norms is not None else (
+            1.0 / jnp.maximum(jnp.linalg.norm(db.astype(jnp.float32), axis=-1),
+                              1e-9)
+        )
+
+        def exact_dist(ids):
+            vecs = db[jnp.maximum(ids, 0)].astype(jnp.float32)
+            vn = vecs * inv[jnp.maximum(ids, 0)][:, None]
+            d = 1.0 - jnp.sum(vn * qx, axis=-1)
+            return jnp.where(ids < 0, INF, d)
+    elif metric == "l2":
+        qx = qf
+
+        def exact_dist(ids):
+            vecs = db[jnp.maximum(ids, 0)].astype(jnp.float32)
+            d = jnp.sum((vecs - qx) ** 2, axis=-1)
+            return jnp.where(ids < 0, INF, d)
+    else:
+        raise ValueError(metric)
+
+    vec_bytes = D * db.dtype.itemsize
+    if metric == "cosine":
+        vec_bytes += 4  # the inv-norm read per scored row
+
+    if kernel == "xla" or (kernel == "fused" and not use_pallas):
+        return exact_dist, exact_dist, vec_bytes
+
+    if kernel == "fused":
+        # lane-align d once for real-TPU lowering; interpret mode (CPU
+        # tests) runs unpadded so reduction shapes — and therefore bits —
+        # match the XLA reference exactly, odd d included
+        db_k, q_k = db, qx
+        if not kernel_interpret and D % 128:
+            pad = (-D) % 128
+            db_k = jnp.pad(db, ((0, 0), (0, pad)))
+            q_k = jnp.pad(qx, ((0, pad),))
+        if metric == "cosine":
+            def dist_to(ids):
+                return gather_rows_dist(
+                    ids, db_k, q_k, inv, interpret=kernel_interpret
+                )
+        else:
+            def dist_to(ids):
+                return gather_rows_dist(
+                    ids, db_k, q_k, interpret=kernel_interpret
+                )
+        return dist_to, exact_dist, vec_bytes
+
+    # ---- fused_q8: approximate distances from the int8 codebook ----------
+    if quant is None:
+        raise ValueError(
+            'kernel="fused_q8" needs the quantized codebook: pass quant= '
+            "(see GateIndex.ensure_quantized / repro.quant.quantize_db)"
+        )
+    codes, scale, zero, q_inv = quant
+    Dp = codes.shape[1]
+    nb = scale.shape[1]
+    qp = jnp.zeros((Dp,), jnp.float32).at[:D].set(qx)  # widened once
+    vec_bytes = Dp + 8 * nb + (4 if metric == "cosine" else 0)
+
+    if use_pallas:
+        if metric == "cosine":
+            def dist_to(ids):
+                return gather_rows_dist_q8(
+                    ids, codes, scale, zero, qp, q_inv,
+                    interpret=kernel_interpret,
+                )
+        else:
+            def dist_to(ids):
+                return gather_rows_dist_q8(
+                    ids, codes, scale, zero, qp, interpret=kernel_interpret
+                )
+        return dist_to, exact_dist, vec_bytes
+
+    def dequant_rows(ids):
+        safe = jnp.maximum(ids, 0)
+        c = codes[safe].astype(jnp.float32)
+        c = c.reshape(c.shape[0], nb, Dp // nb)
+        v = c * scale[safe][:, :, None] + zero[safe][:, :, None]
+        return v.reshape(v.shape[0], Dp)
+
+    if metric == "cosine":
+        def dist_to(ids):
+            vn = dequant_rows(ids) * q_inv[jnp.maximum(ids, 0)][:, None]
+            d = 1.0 - jnp.sum(vn * qp, axis=-1)
+            return jnp.where(ids < 0, INF, d)
+    else:
+        def dist_to(ids):
+            d = jnp.sum((dequant_rows(ids) - qp) ** 2, axis=-1)
+            return jnp.where(ids < 0, INF, d)
+    return dist_to, exact_dist, vec_bytes
+
+
 def beam_search_single(
     db: jax.Array,          # (N, d)
     neighbors: jax.Array,   # (N, R) int32, -1 padded
@@ -77,36 +218,36 @@ def beam_search_single(
     instrument: bool = False,
     conv_k: int = 10,
     metric: str = "l2",
+    kernel: str = "xla",
+    kernel_interpret: bool = False,
+    rerank: int = 0,
+    inv_norms: Optional[jax.Array] = None,
+    quant=None,
 ):
     """One query's Algorithm-1 beam search.
 
     ``metric="l2"`` ranks by squared L2; ``"cosine"`` by 1 − cos(v, q)
     (monotone in angle; vectors need not be pre-normalized).
 
+    ``kernel`` selects the distance path (see docs/kernels.md): ``"xla"``
+    gather+score, ``"fused"`` in-kernel gather via scalar prefetch
+    (bit-identical fp32), ``"fused_q8"`` int8 approximate distances from
+    ``quant`` (a ``repro.quant.QuantizedDb``) steering the walk, followed —
+    when ``rerank > 0`` — by an exact-fp32 re-scoring of the first ``rerank``
+    beam slots so returned distances/order are exact over that prefix (the
+    beam then truncates to ``rerank`` entries).  ``inv_norms`` is the
+    precomputed cosine ``1/‖row‖`` cache; omitted, it is computed once per
+    call (still never per hop).
+
     Returns ``(beam_ids, beam_d, hops, evals)``; with ``instrument=True`` a
     fifth element — a scalar-leaf ``SearchTelemetry`` — is appended.
     """
     L = beam_width
     R = neighbors.shape[1]
-    qf = q.astype(jnp.float32)
-
-    if metric == "l2":
-        def dist_to(ids):
-            vecs = db[jnp.maximum(ids, 0)].astype(jnp.float32)
-            d = jnp.sum((vecs - qf) ** 2, axis=-1)
-            return jnp.where(ids < 0, INF, d)
-    elif metric == "cosine":
-        qn = qf / jnp.maximum(jnp.linalg.norm(qf), 1e-9)
-
-        def dist_to(ids):
-            vecs = db[jnp.maximum(ids, 0)].astype(jnp.float32)
-            vecs = vecs / jnp.maximum(
-                jnp.linalg.norm(vecs, axis=-1, keepdims=True), 1e-9
-            )
-            d = 1.0 - vecs @ qn
-            return jnp.where(ids < 0, INF, d)
-    else:
-        raise ValueError(metric)
+    dist_to, exact_dist, vec_bytes = _make_dist_fns(
+        db, q, metric=metric, kernel=kernel,
+        kernel_interpret=kernel_interpret, inv_norms=inv_norms, quant=quant,
+    )
 
     e_d = dist_to(entry_ids)
     pad = L - entry_ids.shape[0]
@@ -150,6 +291,10 @@ def beam_search_single(
         beam_ids, beam_d, expanded, ring, hops, evals = jax.lax.while_loop(
             cond, step, state
         )
+        if rerank > 0:
+            beam_ids, beam_d, evals, _ = _rerank_exact(
+                beam_ids, beam_d, evals, rerank, exact_dist
+            )
         return beam_ids, beam_d, hops, evals
 
     # ---------------------------------------------------- instrumented loop
@@ -195,6 +340,18 @@ def beam_search_single(
      evictions, conv_hop, prev_topk) = jax.lax.while_loop(
         cond_i, step_i, state
     )
+    # traffic model (docs/kernels.md): every scored row reads vec_bytes,
+    # every hop reads one (R,) int32 neighbor row; the q8 rerank epilogue
+    # re-reads its candidates at full fp32 width
+    bytes_read = evals * vec_bytes + hops * (R * 4)
+    if rerank > 0:
+        beam_ids, beam_d, evals, rr_valid = _rerank_exact(
+            beam_ids, beam_d, evals, rerank, exact_dist
+        )
+        exact_bytes = db.shape[1] * db.dtype.itemsize + (
+            4 if metric == "cosine" else 0
+        )
+        bytes_read = bytes_read + rr_valid * exact_bytes
     tele = SearchTelemetry(
         hops=hops,
         dist_evals=evals,
@@ -203,6 +360,7 @@ def beam_search_single(
         nav_hops=jnp.zeros((), jnp.int32),
         entry_dist=entry_dist,
         entry_rank_proxy=entry_dist / jnp.maximum(beam_d[0], 1e-12),
+        bytes_read=bytes_read,
     )
     return beam_ids, beam_d, hops, evals, tele
 
@@ -213,11 +371,29 @@ def _batched_search(
     neighbors: jax.Array,
     queries: jax.Array,    # (B, d)
     entry_ids: jax.Array,  # (B, E)
+    inv_norms: Optional[jax.Array] = None,  # (N,) cosine 1/‖row‖ cache
+    quant=None,                             # repro.quant.QuantizedDb pytree
     *,
     params: SearchParams,
 ):
     """Jitted core: one compiled program per (shapes, ``params``) pair —
-    ``SearchParams`` is frozen/hashable, so it is the whole static key."""
+    ``SearchParams`` is frozen/hashable, so it is the whole static key.
+    ``inv_norms``/``quant`` are ordinary (pytree) operands: presence vs
+    ``None`` changes the treedef and therefore the cache entry, so callers
+    must pass them consistently per params (``GateIndex`` derives them from
+    the params deterministically)."""
+    if params.kernel == "fused_q8" and quant is None:
+        raise ValueError(
+            'SearchParams(kernel="fused_q8") requires quant= (the int8 '
+            "codebook from repro.quant.quantize_db / "
+            "GateIndex.ensure_quantized)"
+        )
+    k = params.k
+    # q8 approximate walk → exact-fp32 rerank of the top k·α beam prefix
+    rerank = (
+        min(params.beam_width, k * params.rerank_mult)
+        if params.kernel == "fused_q8" else 0
+    )
     fn = functools.partial(
         beam_search_single,
         db,
@@ -228,8 +404,12 @@ def _batched_search(
         instrument=params.instrument,
         conv_k=params.conv_k,
         metric=params.metric,
+        kernel=params.kernel,
+        kernel_interpret=params.kernel_interpret,
+        rerank=rerank,
+        inv_norms=inv_norms,
+        quant=quant,
     )
-    k = params.k
     if not params.instrument:
         beam_ids, beam_d, hops, evals = jax.vmap(fn)(queries, entry_ids)
         return SearchResult(beam_ids[:, :k], beam_d[:, :k], hops, evals)
@@ -245,6 +425,8 @@ def batched_search(
     params: Optional[SearchParams] = None,
     *,
     k: Optional[int] = None,
+    inv_norms: Optional[jax.Array] = None,
+    quant=None,
     **legacy,
 ):
     """Batched Algorithm-1 search.
@@ -254,12 +436,19 @@ def batched_search(
     kwargs (``beam_width=``, ``max_hops=``, ...) still work but emit a
     one-shot ``DeprecationWarning`` and count into ``api.deprecated_kwargs``.
 
+    ``params.kernel`` selects the distance path (docs/kernels.md); for
+    ``"fused_q8"`` pass ``quant=`` (``repro.quant.quantize_db(db)``), and for
+    ``metric="cosine"`` optionally ``inv_norms=`` to reuse a precomputed
+    ``1/‖row‖`` cache across calls.
+
     ``params.instrument=False`` (default): returns ``SearchResult`` — the
     HLO is identical to the pre-telemetry program.  ``instrument=True``:
     returns ``(SearchResult, SearchTelemetry)`` with (B,) telemetry leaves.
     """
     params = resolve_search_params("batched_search", params, legacy, k=k)
-    return _batched_search(db, neighbors, queries, entry_ids, params=params)
+    return _batched_search(
+        db, neighbors, queries, entry_ids, inv_norms, quant, params=params
+    )
 
 
 def search_jit_cache_size() -> int:
@@ -412,6 +601,9 @@ def beam_search_fixed(
         step_i, state0, jnp.arange(num_hops)
     )
     hops = jnp.asarray(num_hops * E, jnp.int32)
+    vec_bytes = db.shape[1] * db.dtype.itemsize + (
+        4 if db_norms is not None else 0  # the norms-cache read per row
+    )
     tele = SearchTelemetry(
         hops=hops,
         dist_evals=evals,
@@ -420,6 +612,8 @@ def beam_search_fixed(
         nav_hops=jnp.zeros((), jnp.int32),
         entry_dist=entry_dist,
         entry_rank_proxy=entry_dist / jnp.maximum(beam_d[0], 1e-12),
+        bytes_read=evals * vec_bytes
+        + hops * (neighbors.shape[1] * 4),
     )
     return beam_ids, beam_d, hops, tele
 

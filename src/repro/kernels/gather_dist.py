@@ -1,16 +1,32 @@
-"""Fused neighbor-expansion distance kernel — the beam-search hot spot.
+"""Fused neighbor-expansion distance kernels — the beam-search hot spot.
 
 Per step the search expands a beam node: gather its R neighbor vectors and
-compute masked squared-L2 against the query.  XLA lowers that as gather →
-subtract → square → reduce (three HBM round-trips of the (B·R, d) gathered
-block).  This kernel fuses mask + distance so the gathered vectors are read
-once: inputs are the gathered rows (B, R, d) (XLA's gather feeds VMEM
-directly), neighbor validity comes in as ids (B, R) with −1 padding.
+compute masked distances against the query.  Two generations live here:
 
-Tiling: grid (B/TB,); block = (TB, R, d) vectors + (TB, d) query + (TB, R)
-ids, all VMEM-resident.  With TB=8, R=32, d=1024: 8·32·1024·4 ≈ 1 MB.
-Distance uses the dot form: ‖v‖² − 2 v·q + ‖q‖² with the v·q contraction on
-the MXU (batched over TB).
+**Legacy (``gather_dist``)** — takes the rows *already gathered* by XLA as a
+(B, R, d) block and fuses mask + distance.  The dominant traffic (the gather
+itself, which round-trips the (B, R, d) block through HBM) is untouched, and
+the block must be re-padded to lane multiples inside jit on every hop.  Kept
+as the pre-ISSUE-10 baseline and for one-shot (non-loop) distance batches.
+
+**In-kernel gather (``gather_rows_dist`` / ``gather_rows_dist_q8``)** — the
+neighbor ids arrive as a *scalar-prefetch* argument
+(``pltpu.PrefetchScalarGridSpec``, ``num_scalar_prefetch=1``): they are in
+SMEM before the kernel body runs, so the BlockSpec index map
+``lambda j, ids: (max(ids[j], 0), 0)`` steers the pipelining machinery to DMA
+exactly the R needed db rows HBM→VMEM, one (1, d) block per grid step.  The
+gathered block never exists in HBM; per hop the traffic is R row-reads plus
+R output floats.  ``gather_rows_dist_q8`` reads int8 rows of a
+``repro.quant.QuantizedDb`` codebook instead (≈4× fewer bytes per hop) and
+dequantizes in-register.  Masking (id < 0 → +inf) happens in-kernel; invalid
+slots still DMA row 0 (``max(ids[j], 0)``) but their distance is discarded.
+
+No per-hop padding: the q8 codebook is block-padded at build time and the
+fp32 path requires lane-aligned ``d`` only for real-TPU lowering — interpret
+mode (the CPU test path) runs unpadded, which keeps the kernels bit-identical
+to the matched XLA formulation in ``graphs/search.py`` even for odd ``d``
+(reduction-tree shape is preserved: per-row ``jnp.sum(axis=-1)`` over the
+same ``d``).  See docs/kernels.md for the traffic model.
 """
 from __future__ import annotations
 
@@ -19,6 +35,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 INF = 3.4e38  # python float: jnp scalars would be captured kernel constants
 TILE_B = 8
@@ -69,3 +86,174 @@ def gather_dist(
         interpret=interpret,
     )(vp, qp, ip)
     return out[:B, :R]
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 10: in-kernel gather via scalar prefetch.
+#
+# Grid = (R,): one program per neighbor slot.  The ids vector is the
+# scalar-prefetch argument, so every BlockSpec index map receives it and the
+# db row map ``(max(ids[j], 0), 0)`` resolves *before* program j runs — the
+# pipeline overlaps row j+1's DMA with row j's compute.  Blocks are (1, d)
+# rows; the reduction is ``jnp.sum(..., axis=-1)`` on the (1, d) block, the
+# exact reduction shape the XLA reference path uses per row, which is what
+# makes fp32 ``fused`` bit-identical to ``xla`` (asserted in
+# tests/test_kernel_equiv.py).
+
+
+def _rows_l2_kernel(ids_ref, db_ref, q_ref, out_ref):
+    j = pl.program_id(0)
+    v = db_ref[...].astype(jnp.float32)          # (1, d) gathered row
+    q = q_ref[...].astype(jnp.float32)           # (1, d)
+    d = jnp.sum((v - q) ** 2, axis=-1)           # (1,)
+    out_ref[0, 0] = jnp.where(ids_ref[j] >= 0, d[0], INF)
+
+
+def _rows_cos_kernel(ids_ref, db_ref, inv_ref, qn_ref, out_ref):
+    j = pl.program_id(0)
+    v = db_ref[...].astype(jnp.float32)          # (1, d)
+    vn = v * inv_ref[0, 0]                       # precomputed 1/‖v‖
+    d = 1.0 - jnp.sum(vn * qn_ref[...], axis=-1)
+    out_ref[0, 0] = jnp.where(ids_ref[j] >= 0, d[0], INF)
+
+
+def _row_spec(ids_dim):
+    # index_map receives (grid idx j, prefetched ids); max() keeps invalid
+    # (-1) slots DMA-safe — they fetch row 0 and the mask discards the value.
+    if ids_dim is None:  # broadcast row (the query): always block (0, 0)
+        return lambda j, ids: (0, 0)
+    return lambda j, ids: (jnp.maximum(ids[j], 0), 0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gather_rows_dist(
+    ids: jax.Array,   # (R,) int32 row ids, -1 = invalid
+    db: jax.Array,    # (N, d) base vectors (d lane-aligned on real TPU)
+    q: jax.Array,     # (d,) fp32 query (pre-normalized under cosine)
+    inv_norms=None,   # (N,) fp32 1/‖row‖ — presence selects the cosine body
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """(R,) masked distances with the gather done inside the kernel."""
+    R = ids.shape[0]
+    D = db.shape[1]
+    ids = ids.astype(jnp.int32)
+    if inv_norms is None:
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(R,),
+            in_specs=[
+                pl.BlockSpec((1, D), _row_spec("db")),
+                pl.BlockSpec((1, D), _row_spec(None)),
+            ],
+            out_specs=pl.BlockSpec((1, 1), lambda j, ids: (j, 0)),
+        )
+        out = pl.pallas_call(
+            _rows_l2_kernel,
+            grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct((R, 1), jnp.float32),
+            interpret=interpret,
+        )(ids, db, q[None, :])
+    else:
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(R,),
+            in_specs=[
+                pl.BlockSpec((1, D), _row_spec("db")),
+                pl.BlockSpec((1, 1), _row_spec("inv")),
+                pl.BlockSpec((1, D), _row_spec(None)),
+            ],
+            out_specs=pl.BlockSpec((1, 1), lambda j, ids: (j, 0)),
+        )
+        out = pl.pallas_call(
+            _rows_cos_kernel,
+            grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct((R, 1), jnp.float32),
+            interpret=interpret,
+        )(ids, db, inv_norms[:, None], q[None, :])
+    return out[:, 0]
+
+
+def _rows_q8_l2_kernel(ids_ref, codes_ref, scale_ref, zero_ref, q_ref, out_ref):
+    j = pl.program_id(0)
+    nb = scale_ref.shape[1]
+    dp = codes_ref.shape[1]
+    blk = dp // nb
+    c = codes_ref[...].reshape(nb, blk).astype(jnp.float32)
+    v = (c * scale_ref[...].reshape(nb, 1)
+         + zero_ref[...].reshape(nb, 1)).reshape(1, dp)
+    d = jnp.sum((v - q_ref[...]) ** 2, axis=-1)
+    out_ref[0, 0] = jnp.where(ids_ref[j] >= 0, d[0], INF)
+
+
+def _rows_q8_cos_kernel(
+    ids_ref, codes_ref, scale_ref, zero_ref, inv_ref, qn_ref, out_ref
+):
+    j = pl.program_id(0)
+    nb = scale_ref.shape[1]
+    dp = codes_ref.shape[1]
+    blk = dp // nb
+    c = codes_ref[...].reshape(nb, blk).astype(jnp.float32)
+    v = (c * scale_ref[...].reshape(nb, 1)
+         + zero_ref[...].reshape(nb, 1)).reshape(1, dp)
+    vn = v * inv_ref[0, 0]
+    d = 1.0 - jnp.sum(vn * qn_ref[...], axis=-1)
+    out_ref[0, 0] = jnp.where(ids_ref[j] >= 0, d[0], INF)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gather_rows_dist_q8(
+    ids: jax.Array,     # (R,) int32 row ids, -1 = invalid
+    codes: jax.Array,   # (N, nb·blk) int8 — block-padded at build time
+    scale: jax.Array,   # (N, nb) fp32
+    zero: jax.Array,    # (N, nb) fp32
+    q: jax.Array,       # (nb·blk,) fp32 query padded to the code width
+    inv_norms=None,     # (N,) fp32 — presence selects the cosine body
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """(R,) masked *approximate* distances from int8 rows, dequantized
+    in-register.  Padded dims dequantize to exactly 0.0 (integer zero-point,
+    see repro.quant) so they contribute nothing."""
+    R = ids.shape[0]
+    Dp = codes.shape[1]
+    nb = scale.shape[1]
+    ids = ids.astype(jnp.int32)
+    if inv_norms is None:
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(R,),
+            in_specs=[
+                pl.BlockSpec((1, Dp), _row_spec("db")),
+                pl.BlockSpec((1, nb), _row_spec("scale")),
+                pl.BlockSpec((1, nb), _row_spec("zero")),
+                pl.BlockSpec((1, Dp), _row_spec(None)),
+            ],
+            out_specs=pl.BlockSpec((1, 1), lambda j, ids: (j, 0)),
+        )
+        out = pl.pallas_call(
+            _rows_q8_l2_kernel,
+            grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct((R, 1), jnp.float32),
+            interpret=interpret,
+        )(ids, codes, scale, zero, q[None, :])
+    else:
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(R,),
+            in_specs=[
+                pl.BlockSpec((1, Dp), _row_spec("db")),
+                pl.BlockSpec((1, nb), _row_spec("scale")),
+                pl.BlockSpec((1, nb), _row_spec("zero")),
+                pl.BlockSpec((1, 1), _row_spec("inv")),
+                pl.BlockSpec((1, Dp), _row_spec(None)),
+            ],
+            out_specs=pl.BlockSpec((1, 1), lambda j, ids: (j, 0)),
+        )
+        out = pl.pallas_call(
+            _rows_q8_cos_kernel,
+            grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct((R, 1), jnp.float32),
+            interpret=interpret,
+        )(ids, codes, scale, zero, inv_norms[:, None], q[None, :])
+    return out[:, 0]

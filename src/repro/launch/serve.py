@@ -36,6 +36,11 @@ def main():
                          "precompiled ladder (repro.obs.router)")
     ap.add_argument("--db-size", type=int, default=4000)
     ap.add_argument("--k", type=int, default=4)
+    ap.add_argument("--kernel", default="xla",
+                    choices=("xla", "fused", "fused_q8"),
+                    help="with --rag: search distance kernel (ISSUE 10) — "
+                         "fused = in-kernel gather, fused_q8 = int8 "
+                         "codebook + exact rerank (see docs/kernels.md)")
     ap.add_argument("--qlog", default=None,
                     help="with --rag --route: capture a JSONL query log "
                          "(repro.feedback) for offline replay / fitting")
@@ -96,7 +101,9 @@ def _run(args):
             router = HardnessRouter(DEFAULT_LADDER, batch_size=args.batch)
             print("warming router (rungs x buckets) ...", flush=True)
             index.warmup_router(
-                router, params=SearchParams(k=args.k, instrument=True)
+                router,
+                params=SearchParams(k=args.k, instrument=True,
+                                    kernel=args.kernel),
             )
         qlog = None
         if args.qlog:
@@ -107,7 +114,7 @@ def _run(args):
 
             qlog = QueryLog(args.qlog)
         pipe = RagPipeline(index, engine, doc_tokens, k=args.k,
-                           router=router, qlog=qlog)
+                           kernel=args.kernel, router=router, qlog=qlog)
         queries = make_queries_in_dist(db, args.batch, seed=args.seed + 2)
         t0 = time.time()
         res = pipe(queries, prompts, max_new_tokens=args.new,

@@ -16,6 +16,11 @@ Field ↔ paper mapping (PAPER.md §5, arXiv:2402.04713, arXiv:2510.22316):
   entry_rank_proxy  entry_dist / final top-1 distance — 1.0 means the
                     chosen entry already was the answer; large values mean
                     a poor entry (entry-quality proxy without ground truth)
+  bytes_read        estimated HBM bytes this query's search read (vector
+                    rows × bytes/row for the active kernel + neighbor-list
+                    reads + the q8 rerank's exact rows) — the
+                    bandwidth-optimization signal of ISSUE 10; see
+                    docs/kernels.md for the traffic model
 """
 from __future__ import annotations
 
@@ -43,6 +48,7 @@ class SearchTelemetry(NamedTuple):
     nav_hops: jax.Array         # int32  — nav-graph descent length (0 if n/a)
     entry_dist: jax.Array       # float32 — best entry distance to query
     entry_rank_proxy: jax.Array # float32 — entry_dist / final top-1 dist
+    bytes_read: jax.Array       # int32  — est. HBM bytes read (kernel model)
 
 
 # Ratio buckets for entry_rank_proxy: 1.0 = perfect entry.
@@ -69,6 +75,7 @@ def summarize(tele: SearchTelemetry) -> dict:
         ),
         "ring_evictions_total": int(t.ring_evictions.sum()),
         "ring_overflow_queries": overflow,
+        "mean_bytes_read": float(t.bytes_read.mean()),
     }
 
 
@@ -103,6 +110,10 @@ def record_search_telemetry(
     reg.counter(
         f"{prefix}.ring_evictions", "visited-ring live-slot evictions"
     ).inc(int(t.ring_evictions.sum()))
+    reg.counter(
+        f"{prefix}.bytes_read",
+        "estimated HBM bytes read by search (kernel traffic model)",
+    ).inc(int(t.bytes_read.astype(np.int64).sum()))
 
 
 def registry_sink(

@@ -1,0 +1,122 @@
+"""Per-block int8 scalar quantization of the base vectors (ISSUE 10).
+
+The beam-search hot loop is HBM-bandwidth-bound: every hop reads up to R
+full-width base rows per query.  Storing the database as int8 with one
+(scale, zero) pair per 128-dim block cuts the bytes per gathered row ~4×
+— the approximate distances computed from the codes steer the walk, and a
+final exact-fp32 rerank of the top ``k·rerank_mult`` beam slots restores
+measured recall (see docs/kernels.md for the traffic model and error
+budget).
+
+Scheme (affine, *integer* zero-point — the same int8 machinery as the
+cross-pod gradient compression in ``train/compress.py``, generalized from
+per-tensor to per-row-block and from symmetric to affine):
+
+    per row i, per 128-dim block b over [mn, mx]:
+      scale = max((mx - mn) / 254, eps)
+      zp    = -127 - round(mn / scale)          # integer, in [-127, 127]
+      code  = clip(round(x / scale) + zp, -127, 127)   int8
+      x̂     = scale * code + zero,   zero = -scale * zp
+
+The integer zero-point matters for shape padding: rows are stored padded to
+a whole number of blocks, pad elements are 0.0, and because every
+pad-containing block spans 0 (mn ≤ 0 ≤ mx) the pad code is exactly ``zp``
+and dequantizes to *exactly* 0.0 — padded dimensions contribute nothing to
+any distance, so odd ``d`` needs no masking in the kernels.
+
+``QuantizedDb`` is an all-array NamedTuple (a pytree): it moves to device
+as one unit and crosses ``jax.jit`` boundaries without a custom node.  The
+block size is implied by the shapes (``codes.shape[1] // scale.shape[1]``).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+BLOCK = 128          # quantization block = one TPU lane tile
+_EPS = 1e-12
+
+
+class QuantizedDb(NamedTuple):
+    """int8 codebook of an (N, d) database, per-(row, block) affine params.
+
+    codes      (N, nb·block) int8 — rows padded to whole blocks
+    scale      (N, nb) float32
+    zero       (N, nb) float32    — ``-scale * zp`` (see module docstring)
+    inv_norms  (N,) float32       — 1 / ‖dequantized row‖ (cosine path);
+                                    computed from the codes, not the fp32
+                                    originals, so approximate cosine uses a
+                                    self-consistent norm
+    """
+
+    codes: Union[np.ndarray, jax.Array]
+    scale: Union[np.ndarray, jax.Array]
+    zero: Union[np.ndarray, jax.Array]
+    inv_norms: Union[np.ndarray, jax.Array]
+
+    @property
+    def block(self) -> int:
+        return self.codes.shape[1] // self.scale.shape[1]
+
+    @property
+    def n_blocks(self) -> int:
+        return self.scale.shape[1]
+
+
+def quantize_db(db: np.ndarray, block: int = BLOCK) -> QuantizedDb:
+    """Host-side (numpy, deterministic) per-block int8 quantization."""
+    x = np.asarray(db, np.float32)
+    N, d = x.shape
+    nb = max((d + block - 1) // block, 1)
+    xp = np.zeros((N, nb * block), np.float32)
+    xp[:, :d] = x
+    blocks = xp.reshape(N, nb, block)
+    mn = blocks.min(axis=2)
+    mx = blocks.max(axis=2)
+    scale = np.maximum((mx - mn) / 254.0, _EPS).astype(np.float32)
+    zp = np.clip(np.round(-127.0 - mn / scale), -127, 127).astype(np.float32)
+    codes = np.clip(
+        np.round(blocks / scale[:, :, None]) + zp[:, :, None], -127, 127
+    ).astype(np.int8)
+    zero = (-scale * zp).astype(np.float32)
+    deq = codes.astype(np.float32) * scale[:, :, None] + zero[:, :, None]
+    inv_norms = (
+        1.0 / np.maximum(np.sqrt((deq.reshape(N, -1) ** 2).sum(axis=1)), 1e-9)
+    ).astype(np.float32)
+    return QuantizedDb(
+        codes=codes.reshape(N, nb * block), scale=scale, zero=zero,
+        inv_norms=inv_norms,
+    )
+
+
+def dequantize(qdb: QuantizedDb, d: int = None):
+    """(N, d) float32 reconstruction (numpy in → numpy out, jax in → jax)."""
+    xp = jnp if isinstance(qdb.codes, jax.Array) else np
+    N = qdb.codes.shape[0]
+    nb, blk = qdb.n_blocks, qdb.block
+    deq = (
+        qdb.codes.reshape(N, nb, blk).astype(xp.float32)
+        * qdb.scale[:, :, None]
+        + qdb.zero[:, :, None]
+    ).reshape(N, nb * blk)
+    return deq if d is None else deq[:, :d]
+
+
+def memory_bytes(qdb: QuantizedDb) -> int:
+    """HBM resident bytes of the quantized codebook."""
+    return int(sum(np.asarray(a).nbytes for a in qdb))
+
+
+def quant_config(qdb: QuantizedDb) -> dict:
+    """Schema fragment recorded into benchmark results / build reports."""
+    return {
+        "block": qdb.block,
+        "n_blocks": qdb.n_blocks,
+        "bytes": memory_bytes(qdb),
+        "bytes_per_row": (
+            qdb.codes.shape[1] + 8 * qdb.n_blocks + 4  # codes + scale/zero + inv_norm
+        ),
+    }

@@ -103,6 +103,8 @@ class ServeDaemon:
         batch_size: int = 16,
         k: int = 10,
         visited_ring: int = 512,
+        kernel: str = "xla",
+        kernel_interpret: bool = False,
         route: bool = False,
         router_kw: Optional[dict] = None,
         metrics_host: str = "127.0.0.1",
@@ -121,10 +123,17 @@ class ServeDaemon:
         self.k = k
         self.visited_ring = visited_ring
         # everything except beam_width/max_hops (those come from the rung
-        # or router side); serving always runs instrumented
+        # or router side); serving always runs instrumented.  ``kernel``
+        # picks the distance path (ISSUE 10) daemon-wide: the ladder warmup
+        # below compiles every rung against it, so per-request params that
+        # keep the daemon's kernel never recompile.  fused_q8 quantizes the
+        # index on warmup (ensure_quantized) before traffic arrives.
         self.base_params = SearchParams(
-            k=k, visited_ring=visited_ring, instrument=True
+            k=k, visited_ring=visited_ring, instrument=True,
+            kernel=kernel, kernel_interpret=kernel_interpret,
         )
+        if kernel == "fused_q8":
+            index.ensure_quantized()
         self.window = RollingWindow(window_size)
         self.controller = AdaptiveController(
             self.window, self.ladder, level=level, **(controller_kw or {})
@@ -373,6 +382,15 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
     ap.add_argument("--serve-seconds", type=float, default=0.0,
                     help="keep serving /metrics this long after the drive "
                          "loop (Ctrl-C exits early)")
+    ap.add_argument("--kernel", default="xla",
+                    choices=("xla", "fused", "fused_q8"),
+                    help="distance kernel (ISSUE 10): fused = in-kernel "
+                         "gather (bit-identical fp32; falls back to the "
+                         "matched XLA formulation off-TPU), fused_q8 = int8 "
+                         "codebook + exact rerank")
+    ap.add_argument("--kernel-interpret", action="store_true",
+                    help="run Pallas kernel bodies in interpret mode "
+                         "(CPU debugging; slow)")
     ap.add_argument("--no-adaptive", dest="adaptive", action="store_false")
     ap.add_argument("--route", action="store_true",
                     help="per-query hardness routing over the ladder "
@@ -405,6 +423,7 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
     index = _build_tiny_index(args.n, args.profile, args.seed)
     daemon = ServeDaemon(
         index, adaptive=args.adaptive, batch_size=args.batch, k=args.k,
+        kernel=args.kernel, kernel_interpret=args.kernel_interpret,
         route=args.route, metrics_port=args.metrics_port,
         qlog=args.qlog, shadow_every=args.shadow_every,
         predictor_dir=args.predictor_dir,

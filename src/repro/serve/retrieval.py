@@ -52,6 +52,7 @@ class RagPipeline:
         *,
         k: int = 4,
         beam_width: int = 64,
+        kernel: str = "xla",      # distance kernel (ISSUE 10, docs/kernels.md)
         instrument: bool = False,
         pad_token: int = 0,
         controller: Optional[AdaptiveController] = None,
@@ -61,7 +62,11 @@ class RagPipeline:
         self.index = index
         self.engine = engine
         self.doc_tokens = doc_tokens
-        self.base_params = SearchParams(k=k, beam_width=beam_width)
+        self.base_params = SearchParams(
+            k=k, beam_width=beam_width, kernel=kernel
+        )
+        if kernel == "fused_q8":
+            index.ensure_quantized()
         self.k = k
         self.beam_width = beam_width
         # the controller/router needs telemetry to vote on
