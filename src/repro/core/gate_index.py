@@ -273,7 +273,10 @@ class GateIndex:
         the same treedef per ``SearchParams`` value — the jit cache stays
         warm.  Cosine always gets the precomputed ``1/‖row‖`` cache
         (ISSUE 10 satellite: never renormalize rows per hop); ``fused_q8``
-        gets the device codebook, quantizing on first use."""
+        gets the device codebook, quantizing on first use; real-TPU
+        ``fused`` with ``d % 128 != 0`` gets the cached lane-aligned db
+        copy — padding inside the jitted search would re-materialize an
+        O(N·d) copy per batch."""
         dev = self._device()
         kw: Dict = {}
         if params.metric == "cosine":
@@ -292,6 +295,17 @@ class GateIndex:
                     *(jnp.asarray(a) for a in q)
                 )
             kw["quant"] = dev["quant"]
+        if (params.kernel == "fused" and not params.kernel_interpret
+                and dev["db"].shape[1] % 128):
+            from repro.kernels.ops import _on_tpu
+
+            if _on_tpu():
+                if "db_lane" not in dev:
+                    pad = (-dev["db"].shape[1]) % 128
+                    dev["db_lane"] = jnp.pad(
+                        dev["db"], ((0, 0), (0, pad))
+                    )
+                kw["db_lane"] = dev["db_lane"]
         return kw
 
     def select_entries(self, queries: jax.Array, *, instrument: bool = False):
@@ -567,7 +581,8 @@ class GateIndex:
         evals = np.zeros((B,), np.int32)
         leaves = {
             f: np.zeros((B,), np.float32 if f in ("entry_dist",
-                                                  "entry_rank_proxy")
+                                                  "entry_rank_proxy",
+                                                  "bytes_read")
                else np.int32)
             for f in SearchTelemetry._fields
         }

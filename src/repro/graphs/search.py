@@ -80,6 +80,7 @@ def _rerank_exact(beam_ids, beam_d, evals, rerank, exact_dist):
 
 def _make_dist_fns(
     db, q, *, metric, kernel, kernel_interpret, inv_norms, quant,
+    db_lane=None,
 ):
     """Build ``(dist_to, exact_dist, vec_bytes)`` for one query.
 
@@ -141,13 +142,20 @@ def _make_dist_fns(
         return exact_dist, exact_dist, vec_bytes
 
     if kernel == "fused":
-        # lane-align d once for real-TPU lowering; interpret mode (CPU
-        # tests) runs unpadded so reduction shapes — and therefore bits —
-        # match the XLA reference exactly, odd d included
+        # lane-align d for real-TPU lowering; interpret mode (CPU tests)
+        # runs unpadded so reduction shapes — and therefore bits — match
+        # the XLA reference exactly, odd d included.  The (N, d) pad must
+        # come in precomputed (``db_lane``, cached per index by
+        # GateIndex._search_kwargs) — padding here would trace an O(N·d)
+        # HBM copy into every search batch's program.  The inline fallback
+        # exists only for direct beam_search_single callers and pays that
+        # copy per batch.
         db_k, q_k = db, qx
         if not kernel_interpret and D % 128:
             pad = (-D) % 128
-            db_k = jnp.pad(db, ((0, 0), (0, pad)))
+            db_k = db_lane if db_lane is not None else jnp.pad(
+                db, ((0, 0), (0, pad))
+            )
             q_k = jnp.pad(qx, ((0, pad),))
         if metric == "cosine":
             def dist_to(ids):
@@ -223,6 +231,7 @@ def beam_search_single(
     rerank: int = 0,
     inv_norms: Optional[jax.Array] = None,
     quant=None,
+    db_lane: Optional[jax.Array] = None,
 ):
     """One query's Algorithm-1 beam search.
 
@@ -237,7 +246,11 @@ def beam_search_single(
     beam slots so returned distances/order are exact over that prefix (the
     beam then truncates to ``rerank`` entries).  ``inv_norms`` is the
     precomputed cosine ``1/‖row‖`` cache; omitted, it is computed once per
-    call (still never per hop).
+    call (still never per hop).  ``db_lane`` is the precomputed lane-aligned
+    (d padded to a 128 multiple) copy of ``db`` the real-TPU ``fused``
+    kernel reads; omitted with ``d % 128 != 0``, it is padded inline —
+    an O(N·d) copy per batch, so serving callers should pass it
+    (``GateIndex`` caches one per index).
 
     Returns ``(beam_ids, beam_d, hops, evals)``; with ``instrument=True`` a
     fifth element — a scalar-leaf ``SearchTelemetry`` — is appended.
@@ -247,6 +260,7 @@ def beam_search_single(
     dist_to, exact_dist, vec_bytes = _make_dist_fns(
         db, q, metric=metric, kernel=kernel,
         kernel_interpret=kernel_interpret, inv_norms=inv_norms, quant=quant,
+        db_lane=db_lane,
     )
 
     e_d = dist_to(entry_ids)
@@ -342,8 +356,13 @@ def beam_search_single(
     )
     # traffic model (docs/kernels.md): every scored row reads vec_bytes,
     # every hop reads one (R,) int32 neighbor row; the q8 rerank epilogue
-    # re-reads its candidates at full fp32 width
-    bytes_read = evals * vec_bytes + hops * (R * 4)
+    # re-reads its candidates at full fp32 width.  float32 on device: wide
+    # vectors wrap int32 (d=4096 fp32 is 16 KiB/row → overflow at ~131k
+    # evals) and the sink can only widen after the damage.
+    bytes_read = (
+        evals.astype(jnp.float32) * float(vec_bytes)
+        + hops.astype(jnp.float32) * float(R * 4)
+    )
     if rerank > 0:
         beam_ids, beam_d, evals, rr_valid = _rerank_exact(
             beam_ids, beam_d, evals, rerank, exact_dist
@@ -351,7 +370,9 @@ def beam_search_single(
         exact_bytes = db.shape[1] * db.dtype.itemsize + (
             4 if metric == "cosine" else 0
         )
-        bytes_read = bytes_read + rr_valid * exact_bytes
+        bytes_read = bytes_read + rr_valid.astype(jnp.float32) * float(
+            exact_bytes
+        )
     tele = SearchTelemetry(
         hops=hops,
         dist_evals=evals,
@@ -373,15 +394,16 @@ def _batched_search(
     entry_ids: jax.Array,  # (B, E)
     inv_norms: Optional[jax.Array] = None,  # (N,) cosine 1/‖row‖ cache
     quant=None,                             # repro.quant.QuantizedDb pytree
+    db_lane: Optional[jax.Array] = None,    # (N, d128) lane-aligned db copy
     *,
     params: SearchParams,
 ):
     """Jitted core: one compiled program per (shapes, ``params``) pair —
     ``SearchParams`` is frozen/hashable, so it is the whole static key.
-    ``inv_norms``/``quant`` are ordinary (pytree) operands: presence vs
-    ``None`` changes the treedef and therefore the cache entry, so callers
-    must pass them consistently per params (``GateIndex`` derives them from
-    the params deterministically)."""
+    ``inv_norms``/``quant``/``db_lane`` are ordinary (pytree) operands:
+    presence vs ``None`` changes the treedef and therefore the cache entry,
+    so callers must pass them consistently per params (``GateIndex`` derives
+    them from the params deterministically)."""
     if params.kernel == "fused_q8" and quant is None:
         raise ValueError(
             'SearchParams(kernel="fused_q8") requires quant= (the int8 '
@@ -409,6 +431,7 @@ def _batched_search(
         rerank=rerank,
         inv_norms=inv_norms,
         quant=quant,
+        db_lane=db_lane,
     )
     if not params.instrument:
         beam_ids, beam_d, hops, evals = jax.vmap(fn)(queries, entry_ids)
@@ -427,6 +450,7 @@ def batched_search(
     k: Optional[int] = None,
     inv_norms: Optional[jax.Array] = None,
     quant=None,
+    db_lane: Optional[jax.Array] = None,
     **legacy,
 ):
     """Batched Algorithm-1 search.
@@ -437,9 +461,11 @@ def batched_search(
     one-shot ``DeprecationWarning`` and count into ``api.deprecated_kwargs``.
 
     ``params.kernel`` selects the distance path (docs/kernels.md); for
-    ``"fused_q8"`` pass ``quant=`` (``repro.quant.quantize_db(db)``), and for
+    ``"fused_q8"`` pass ``quant=`` (``repro.quant.quantize_db(db)``), for
     ``metric="cosine"`` optionally ``inv_norms=`` to reuse a precomputed
-    ``1/‖row‖`` cache across calls.
+    ``1/‖row‖`` cache across calls, and for ``"fused"`` on real TPU with
+    ``d % 128 != 0`` optionally ``db_lane=`` (the lane-aligned db copy) so
+    the padding isn't re-materialized inside every search batch.
 
     ``params.instrument=False`` (default): returns ``SearchResult`` — the
     HLO is identical to the pre-telemetry program.  ``instrument=True``:
@@ -447,7 +473,8 @@ def batched_search(
     """
     params = resolve_search_params("batched_search", params, legacy, k=k)
     return _batched_search(
-        db, neighbors, queries, entry_ids, inv_norms, quant, params=params
+        db, neighbors, queries, entry_ids, inv_norms, quant, db_lane,
+        params=params,
     )
 
 
@@ -612,8 +639,10 @@ def beam_search_fixed(
         nav_hops=jnp.zeros((), jnp.int32),
         entry_dist=entry_dist,
         entry_rank_proxy=entry_dist / jnp.maximum(beam_d[0], 1e-12),
-        bytes_read=evals * vec_bytes
-        + hops * (neighbors.shape[1] * 4),
+        # float32: wide vectors wrap an int32 byte count (see the
+        # while-loop variant above)
+        bytes_read=evals.astype(jnp.float32) * float(vec_bytes)
+        + hops.astype(jnp.float32) * float(neighbors.shape[1] * 4),
     )
     return beam_ids, beam_d, hops, tele
 

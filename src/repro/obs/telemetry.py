@@ -20,7 +20,9 @@ Field ↔ paper mapping (PAPER.md §5, arXiv:2402.04713, arXiv:2510.22316):
                     rows × bytes/row for the active kernel + neighbor-list
                     reads + the q8 rerank's exact rows) — the
                     bandwidth-optimization signal of ISSUE 10; see
-                    docs/kernels.md for the traffic model
+                    docs/kernels.md for the traffic model.  float32 on
+                    device: an int32 count wraps at ~131k evals of a
+                    d=4096 fp32 row, turning registry counters negative
 """
 from __future__ import annotations
 
@@ -48,7 +50,7 @@ class SearchTelemetry(NamedTuple):
     nav_hops: jax.Array         # int32  — nav-graph descent length (0 if n/a)
     entry_dist: jax.Array       # float32 — best entry distance to query
     entry_rank_proxy: jax.Array # float32 — entry_dist / final top-1 dist
-    bytes_read: jax.Array       # int32  — est. HBM bytes read (kernel model)
+    bytes_read: jax.Array       # float32 — est. HBM bytes read (kernel model)
 
 
 # Ratio buckets for entry_rank_proxy: 1.0 = perfect entry.
@@ -113,7 +115,7 @@ def record_search_telemetry(
     reg.counter(
         f"{prefix}.bytes_read",
         "estimated HBM bytes read by search (kernel traffic model)",
-    ).inc(int(t.bytes_read.astype(np.int64).sum()))
+    ).inc(float(t.bytes_read.astype(np.float64).sum()))
 
 
 def registry_sink(

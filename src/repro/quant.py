@@ -12,17 +12,27 @@ Scheme (affine, *integer* zero-point — the same int8 machinery as the
 cross-pod gradient compression in ``train/compress.py``, generalized from
 per-tensor to per-row-block and from symmetric to affine):
 
-    per row i, per 128-dim block b over [mn, mx]:
+    per row i, per 128-dim block b:
+      mn    = min(block min, 0),  mx = max(block max, 0)
       scale = max((mx - mn) / 254, eps)
       zp    = -127 - round(mn / scale)          # integer, in [-127, 127]
       code  = clip(round(x / scale) + zp, -127, 127)   int8
       x̂     = scale * code + zero,   zero = -scale * zp
 
+The block range is *extended to include zero* before computing the scale.
+With mn ≤ 0 ≤ mx the zero-point lands in [-127, 127] by construction — no
+clamp on ``zp`` — which is what keeps the half-step reconstruction bound
+valid for offset blocks (e.g. all-positive ReLU-derived features).  A
+clamped zero-point would silently saturate any block whose values don't
+span 0: every code clips to ±127 and the whole block dequantizes to one
+wrong value.  The cost of the extension is a (at most ~2×) larger step for
+strongly one-sided blocks, never a broken reconstruction.
+
 The integer zero-point matters for shape padding: rows are stored padded to
-a whole number of blocks, pad elements are 0.0, and because every
-pad-containing block spans 0 (mn ≤ 0 ≤ mx) the pad code is exactly ``zp``
-and dequantizes to *exactly* 0.0 — padded dimensions contribute nothing to
-any distance, so odd ``d`` needs no masking in the kernels.
+a whole number of blocks, pad elements are 0.0, and because every block
+spans 0 by construction the pad code is exactly ``zp`` and dequantizes to
+*exactly* 0.0 — padded dimensions contribute nothing to any distance, so
+odd ``d`` needs no masking in the kernels.
 
 ``QuantizedDb`` is an all-array NamedTuple (a pytree): it moves to device
 as one unit and crosses ``jax.jit`` boundaries without a custom node.  The
@@ -74,10 +84,13 @@ def quantize_db(db: np.ndarray, block: int = BLOCK) -> QuantizedDb:
     xp = np.zeros((N, nb * block), np.float32)
     xp[:, :d] = x
     blocks = xp.reshape(N, nb, block)
-    mn = blocks.min(axis=2)
-    mx = blocks.max(axis=2)
+    # extend the range to span 0 so zp ∈ [-127, 127] without clamping — a
+    # clamped zero-point saturates offset (e.g. all-positive) blocks to a
+    # single dequantized value (see module docstring)
+    mn = np.minimum(blocks.min(axis=2), 0.0)
+    mx = np.maximum(blocks.max(axis=2), 0.0)
     scale = np.maximum((mx - mn) / 254.0, _EPS).astype(np.float32)
-    zp = np.clip(np.round(-127.0 - mn / scale), -127, 127).astype(np.float32)
+    zp = np.round(-127.0 - mn / scale).astype(np.float32)
     codes = np.clip(
         np.round(blocks / scale[:, :, None]) + zp[:, :, None], -127, 127
     ).astype(np.int8)

@@ -55,6 +55,37 @@ def test_save_load_roundtrip(built_index, tmp_path):
     np.testing.assert_array_equal(np.asarray(r1.ids), np.asarray(r2.ids))
 
 
+def test_search_kwargs_caches_lane_aligned_db(monkeypatch):
+    """Regression (REVIEW): real-TPU ``fused`` search with d % 128 != 0 gets
+    ONE cached lane-aligned db copy from ``_search_kwargs`` — never a
+    re-pad inside the jitted search program.  Off TPU (and in interpret
+    mode, which runs unpadded) the operand is absent, keeping treedefs
+    consistent per SearchParams value."""
+    from repro.graphs.nsg import build_nsg
+    from repro.graphs.params import SearchParams
+    import repro.kernels.ops as ops
+
+    rng = np.random.default_rng(9)
+    db = rng.standard_normal((300, 36)).astype(np.float32)
+    nsg = build_nsg(db, R=8, knn_k=8, search_l=16, pool_size=24)
+    tq, _ = train_eval_query_split(db, 64, 16)
+    g = GateConfig(n_hubs=8, epochs=4, batch_hubs=8, subgraph_max_nodes=24)
+    idx = GateIndex.from_graph(db, nsg.neighbors, nsg.enter_id, tq, g)
+    sp = SearchParams(k=5, kernel="fused")
+    assert "db_lane" not in idx._search_kwargs(sp)   # CPU: XLA fallback
+    monkeypatch.setattr(ops, "_on_tpu", lambda: True)
+    kw = idx._search_kwargs(sp)
+    assert kw["db_lane"].shape == (300, 128)
+    np.testing.assert_array_equal(np.asarray(kw["db_lane"][:, :36]), db)
+    np.testing.assert_array_equal(
+        np.asarray(kw["db_lane"][:, 36:]), 0.0
+    )
+    assert idx._search_kwargs(sp)["db_lane"] is kw["db_lane"]  # cached once
+    assert "db_lane" not in idx._search_kwargs(
+        sp.replace(kernel_interpret=True)
+    )
+
+
 def test_ablation_variants_build():
     """GATE w/o H / w/o FE / w/o L all construct and search (Table 4)."""
     from repro.graphs.nsg import build_nsg

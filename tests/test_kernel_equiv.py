@@ -139,6 +139,26 @@ def test_quant_roundtrip_and_exact_zero_pads(n, d):
     assert np.all(np.abs(np.asarray(qdb.codes)) <= 127)
 
 
+def test_quant_roundtrip_offset_blocks():
+    """Regression (REVIEW): blocks that don't span 0 — all-positive /
+    offset values, e.g. ReLU-derived features — must still reconstruct
+    within half a quantization step.  A clamped zero-point saturates every
+    code in such blocks to ±127 and the whole block dequantizes to one
+    wrong value (error ≈ the offset, not the half-step bound); the fix
+    extends each block's range to include 0 so zp ∈ [-127, 127] by
+    construction."""
+    rng = np.random.default_rng(42)
+    for off in (10.5, -7.25, 200.0):
+        db = (off + 0.1 * rng.standard_normal((20, 37))).astype(np.float32)
+        qdb = quantize_db(db)
+        deq = dequantize(qdb)
+        step = np.repeat(np.asarray(qdb.scale), qdb.block, axis=1)[:, :37]
+        err = np.abs(deq[:, :37] - db)
+        assert np.all(err <= 0.5 * step + 1e-5), (off, err.max())
+        # padded dims still reconstruct to EXACTLY 0.0 (every block spans 0)
+        assert np.array_equal(deq[:, 37:], np.zeros_like(deq[:, 37:]))
+
+
 def test_q8_kernel_matches_xla_fallback_bitwise():
     """The fused_q8 interpret kernel and its XLA dequantize-and-score
     fallback are the same math on the same codes → identical search ids."""
@@ -181,6 +201,57 @@ def test_q8_requires_codebook():
         batched_search(db, nbrs, q, entries, sp)
 
 
+# --------------------------------------------------- db_lane (fused on TPU)
+def test_db_lane_operand_threads_through_search():
+    """The precomputed lane-aligned db copy is an ordinary extra operand:
+    passing it must not change any result (only the real-TPU fused path
+    reads it; here it rides through jit/vmap unused)."""
+    db, nbrs, q, entries = _problem(d=20, R=8, seed=5)
+    db_lane = jnp.pad(db, ((0, 0), (0, (-db.shape[1]) % 128)))
+    for kern, interp in (("xla", False), ("fused", True)):
+        sp = SearchParams(k=5, beam_width=8, max_hops=16, kernel=kern,
+                          kernel_interpret=interp)
+        a = batched_search(db, nbrs, q, entries, sp)
+        b = batched_search(db, nbrs, q, entries, sp, db_lane=db_lane)
+        np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+        np.testing.assert_array_equal(
+            np.asarray(a.dists), np.asarray(b.dists)
+        )
+
+
+def test_fused_tpu_path_uses_precomputed_db_lane(monkeypatch):
+    """Regression (REVIEW): on the real-TPU fused path with d % 128 != 0
+    the kernel must read the caller's precomputed lane-aligned copy —
+    re-padding the (N, d) database inside the jitted per-search program
+    traces an O(N·d) HBM allocation + copy into every batch."""
+    import importlib
+
+    import repro.kernels.ops as ops
+    from repro.graphs import search as S
+
+    # the package re-exports a *function* named gather_dist which shadows
+    # the submodule attribute, so resolve the module via importlib
+    gd = importlib.import_module("repro.kernels.gather_dist")
+
+    monkeypatch.setattr(ops, "_on_tpu", lambda: True)
+    seen = {}
+
+    def fake_gather(ids, db, q, inv_norms=None, *, interpret=False):
+        seen["db"] = db
+        return jnp.zeros((ids.shape[0],), jnp.float32)
+
+    monkeypatch.setattr(gd, "gather_rows_dist", fake_gather)
+    rng = np.random.default_rng(0)
+    db = jnp.asarray(rng.standard_normal((32, 20)).astype(np.float32))
+    db_lane = jnp.pad(db, ((0, 0), (0, 108)))
+    dist_to, _, _ = S._make_dist_fns(
+        db, db[0], metric="l2", kernel="fused", kernel_interpret=False,
+        inv_norms=None, quant=None, db_lane=db_lane,
+    )
+    dist_to(jnp.arange(4, dtype=jnp.int32))
+    assert seen["db"] is db_lane
+
+
 # ------------------------------------------------------- bytes_read telemetry
 def test_bytes_read_follows_traffic_model():
     db, nbrs, q, entries = _problem(n=150, d=20, R=8, seed=3)
@@ -191,7 +262,33 @@ def test_bytes_read_follows_traffic_model():
         _, tele = batched_search(db, nbrs, q, entries, sp)
         expect = (np.asarray(tele.dist_evals) * vec_bytes
                   + np.asarray(tele.hops) * R * 4)
-        np.testing.assert_array_equal(np.asarray(tele.bytes_read), expect)
+        got = np.asarray(tele.bytes_read)
+        assert got.dtype == np.float32  # int32 wraps for wide vectors
+        np.testing.assert_array_equal(got, expect.astype(np.float32))
+
+
+def test_bytes_read_wide_vectors_no_int32_wrap():
+    """Regression (REVIEW): the traffic model is float32 on device — with
+    wide rows (d=4096 fp32 = 16 KiB) an int32 count wraps negative at ~131k
+    evals/query and poisons the ``search.bytes_read`` registry counter."""
+    from repro.obs.registry import MetricsRegistry
+    from repro.obs.telemetry import SearchTelemetry, record_search_telemetry
+
+    per_query = 200_000.0 * 16_384.0            # ≈ 3.3e9 ≫ int32 max
+    z = np.zeros((2,), np.int32)
+    tele = SearchTelemetry(
+        hops=np.full((2,), 1000, np.int32),
+        dist_evals=np.full((2,), 200_000, np.int32),
+        ring_evictions=z, converged_hop=z, nav_hops=z,
+        entry_dist=np.zeros((2,), np.float32),
+        entry_rank_proxy=np.ones((2,), np.float32),
+        bytes_read=np.full((2,), per_query, np.float32),
+    )
+    reg = MetricsRegistry()
+    record_search_telemetry(tele, reg)
+    val = reg.get("search.bytes_read").value
+    assert val == pytest.approx(2 * per_query)
+    assert val > 0
 
 
 def test_bytes_read_q8_below_fp32_at_wide_d():
